@@ -1,0 +1,291 @@
+"""Loop-aware HLO statistics.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scanned program (layer scan, microbatch accumulation, chunked xent)
+under-reports FLOPs / bytes / collectives by the product of its trip
+counts.  This module parses the compiled HLO text instead:
+
+* splits the module into computations,
+* extracts every while loop's trip count (scan emits a counter compared
+  against a constant in the loop condition),
+* builds a per-computation execution-multiplier map (callers x trips,
+  nested loops multiply),
+* counts dot/convolution FLOPs from operand shapes (x multiplier),
+* sums collective wire bytes (x multiplier, x ring wire factor),
+* estimates HBM traffic as operand+result bytes of dots, collectives and
+  large fusions (x multiplier) — a roofline-level approximation that is
+  consistent across configs.
+
+Everything is per-device (the compiled module is the partitioned
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda k: 2 * (k - 1) / k,
+    "all-gather": lambda k: (k - 1),
+    "reduce-scatter": lambda k: (k - 1) / k,
+    "all-to-all": lambda k: (k - 1) / k,
+    "collective-permute": lambda k: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    total = 0
+    elems = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    # instr name -> full shape string (for operand shape lookup)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        # headers like: %region_0.2 (arg: (s32[], f32[...])) -> (...) {
+        # (nested parens in tuple params -> greedy match up to "->")
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{",
+                          line)
+        if header and not line.startswith(" "):
+            current = Computation(header.group(1))
+            comps[current.name] = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        current.lines.append(s)
+        m = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+\w",
+                     s)
+        im = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+[a-z][\w\-]*\(",
+                      s)
+        if im:
+            current.shapes[im.group(1)] = im.group(2)
+    return comps
+
+
+def _trip_count(cond: Computation, default: int = 1) -> int:
+    """Scan conditions compare the induction var against a constant."""
+    consts = {}
+    for ln in cond.lines:
+        m = re.match(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\w+\[\]\s+constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond.lines:
+        if "compare(" in ln and ("direction=LT" in ln or "direction=GT" in ln):
+            args = re.findall(r"%?([\w.\-]+)", ln[ln.index("compare("):])
+            for a in args:
+                if a in consts:
+                    return max(consts[a], 1)
+    if consts:
+        return max(consts.values())
+    return default
+
+
+def _callees(line: str) -> List[str]:
+    out = []
+    for key in ("calls=", "body=", "condition=", "to_apply=",
+                "true_computation=", "false_computation="):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-]+)", line):
+            out.append(m.group(1))
+    # fusion(...) , calls=%fused_computation handled above
+    return out
+
+
+def build_multipliers(comps: Dict[str, Computation],
+                      entry: str) -> Dict[str, float]:
+    """Execution count of each computation, starting from the entry."""
+    mult: Dict[str, float] = {entry: 1.0}
+    # iterate to fixpoint (call graph is a DAG in HLO)
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ln in comp.lines:
+            callees = _callees(ln)
+            if not callees:
+                continue
+            is_while = re.search(r"\bwhile\(", ln) is not None
+            trips = 1
+            if is_while:
+                cond_m = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cond_m and cond_m.group(1) in comps:
+                    trips = _trip_count(comps[cond_m.group(1)])
+            for callee in callees:
+                factor = mult[cname] * (trips if is_while else 1)
+                if callee not in mult or mult[callee] < factor:
+                    mult[callee] = max(mult.get(callee, 0.0), factor)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult
+
+
+def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
+    """2 * result_elems * contracted_size for a dot line."""
+    out_m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\S+)\s+dot\(", line)
+    if not out_m:
+        return 0.0
+    out_elems, _ = _shape_elems_bytes(out_m.group(1))
+    # contracted size from the lhs operand shape + contracting dims
+    ops = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if ops and cdims:
+        lhs_shape = shapes.get(ops.group(1))
+        if lhs_shape:
+            dm = _SHAPE_RE.search(lhs_shape)
+            if dm:
+                dims = [int(d) for d in dm.group(2).split(",") if d]
+                for ci in cdims.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(line: str, shapes: Dict[str, str]) -> float:
+    out_m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\S+)\s+convolution\(",
+                     line)
+    if not out_m:
+        return 0.0
+    out_elems, _ = _shape_elems_bytes(out_m.group(1))
+    ops = re.findall(r"convolution\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", line)
+    if not ops:
+        return 0.0
+    rhs_shape = shapes.get(ops[0][1])
+    k = 1
+    if rhs_shape:
+        dm = _SHAPE_RE.search(rhs_shape)
+        if dm:
+            dims = [int(d) for d in dm.group(2).split(",") if d]
+            # kernel spatial x input-feature dims ~ prod(all)/out_features
+            if dims:
+                k = max(1, int(
+                    float(_prod(dims)) / max(dims[-1], 1)))
+    return 2.0 * out_elems * k
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    if "source_target_pairs" in line:
+        return 2
+    return default
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    op_counts: Dict[str, float] = field(default_factory=dict)
+    op_bytes: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+
+def analyze_hlo(hlo: str, default_group: int = 16) -> HloStats:
+    comps = parse_computations(hlo)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:
+        # fall back to the computation with the most lines
+        entry = max(comps, key=lambda c: len(comps[c].lines))
+    mult = build_multipliers(comps, entry)
+
+    stats = HloStats()
+    coll_re = re.compile(
+        r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]+?\)?)\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    for cname, comp in comps.items():
+        k_mult = mult.get(cname, 0.0)
+        if k_mult <= 0:
+            continue
+        for ln in comp.lines:
+            if "while(" in ln and re.search(r"\bwhile\(", ln):
+                stats.n_while += 1
+                cond_m = re.search(r"condition=%?([\w.\-]+)", ln)
+                if cond_m and cond_m.group(1) in comps:
+                    stats.max_trip = max(stats.max_trip,
+                                         _trip_count(comps[cond_m.group(1)]))
+            if " dot(" in ln:
+                stats.flops += _dot_flops(ln, comp.shapes) * k_mult
+                _, obytes = _shape_elems_bytes(ln.split(" dot(")[0])
+                # operands + result traffic
+                io = obytes
+                for op in re.findall(r"dot\(([^)]*)\)", ln):
+                    for nm in re.findall(r"%?([\w.\-]+)", op):
+                        if nm in comp.shapes:
+                            io += _shape_elems_bytes(comp.shapes[nm])[1]
+                stats.hbm_bytes += io * k_mult
+                continue
+            if " convolution(" in ln:
+                stats.flops += _conv_flops(ln, comp.shapes) * k_mult
+                continue
+            cm = coll_re.match(ln)
+            if cm:
+                shape_part, op = cm.group(1), cm.group(2)
+                _, nbytes = _shape_elems_bytes(shape_part)
+                if op == "all-gather":
+                    # operand (the shard) defines the wire volume
+                    opm = re.search(r"\(\s*%?([\w.\-]+)", ln[ln.index(op):])
+                    if opm and opm.group(1) in comp.shapes:
+                        _, nbytes = _shape_elems_bytes(
+                            comp.shapes[opm.group(1)])
+                grp = _group_size(ln, default_group)
+                wire = nbytes * _WIRE_FACTOR[op](max(grp, 2))
+                stats.wire_bytes += wire * k_mult
+                stats.hbm_bytes += nbytes * k_mult
+                stats.op_counts[op] = stats.op_counts.get(op, 0) + k_mult
+                stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + wire * k_mult
+    return stats

@@ -1,0 +1,65 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def render(path: str = "results/dryrun.json", mesh: str = "pod16x16",
+           reduction: str = "ring") -> str:
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    skips = []
+    fails = []
+    for key, r in sorted(data.items()):
+        if r.get("mesh") != mesh and not key.endswith(f"|{mesh}|{reduction}"):
+            if f"|{mesh}|" not in key and r.get("mesh") != mesh:
+                continue
+        if f"|{mesh}" not in key:
+            continue
+        if reduction not in key and r.get("reduction", "ring") != reduction:
+            continue
+        if r["status"] == "skip":
+            skips.append(f"- `{r['arch']} x {r['shape']}`: {r['reason']}")
+            continue
+        if r["status"] == "fail":
+            fails.append(f"- `{key}`: {r['error'][:160]}")
+            continue
+        rows.append(r)
+
+    out = []
+    out.append(f"| arch | shape | t_compute | t_memory | t_collective | "
+               f"bottleneck | HBM/dev GB | useful-FLOPs | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        mem = r.get("memory") or {}
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(r['t_compute_s'])} | "
+            f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | {mem.get('total_GB', 0):.2f} | "
+            f"{r['useful_flops_frac']:.2f} | {r['roofline_fraction']:.3f} |")
+    if skips:
+        out.append("")
+        out.append("Skipped cells (per DESIGN.md §Arch-applicability):")
+        out.extend(sorted(set(skips)))
+    if fails:
+        out.append("")
+        out.append("FAILED cells:")
+        out.extend(fails)
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    red = sys.argv[2] if len(sys.argv) > 2 else "ring"
+    print(render(mesh=mesh, reduction=red))

@@ -1,0 +1,188 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` gives per-device FLOPs/bytes (the compiled module is
+the partitioned per-device program).  Collective wire bytes are parsed
+from the compiled HLO: operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, scaled by the ring
+cost of the op given its replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+# --- hardware constants: TPU v5e (target platform) -------------------------
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# wire bytes per device, as a multiple of the per-device operand bytes,
+# for a ring implementation with group size k
+_WIRE_FACTOR = {
+    "all-reduce": lambda k: 2 * (k - 1) / k,
+    "all-gather": lambda k: (k - 1),          # operand is the local shard
+    "reduce-scatter": lambda k: (k - 1) / k,
+    "all-to-all": lambda k: (k - 1) / k,
+    "collective-permute": lambda k: 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,256]{1,0}' -> bytes.  Tuples handled by the caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    # iota format: replica_groups=[32,16]<=[512] → group size = dims[-1]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    # explicit format: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # source-target pairs (collective-permute): one hop
+    if "source_target_pairs" in line:
+        return 2
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    op_counts: Dict[str, int] = field(default_factory=dict)
+    op_bytes: Dict[str, float] = field(default_factory=dict)
+
+
+def collective_bytes(hlo_text: str, default_group: int = 16) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"^[%\w.\-]+ = (\(?[\w\[\],{} ]+?\)?) (all-reduce|all-gather|"
+            r"reduce-scatter|all-to-all|collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        shape_part, op, started = m.group(1), m.group(2), m.group(3)
+        if started == "-start" and op in ("all-reduce", "all-gather",
+                                          "collective-permute"):
+            pass  # async start carries the payload; done is empty
+        # sum over tuple elements if present
+        nbytes = 0
+        for piece in re.findall(r"\w+\[[\d,]*\]", shape_part):
+            nbytes += _shape_bytes(piece)
+        k = _group_size(s, default_group)
+        factor = _WIRE_FACTOR[op](max(k, 2))
+        stats.wire_bytes += nbytes * factor
+        stats.op_counts[op] = stats.op_counts.get(op, 0) + 1
+        stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + nbytes * factor
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_total: float
+    chips: int
+    op_counts: Dict[str, int] = field(default_factory=dict)
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips): how much compiled compute is
+        'useful' — catches remat recompute, masked-attention waste, padding."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops_total / max(total_hlo, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs utilization at the modeled bound: the perf score.
+        = (model_flops/chips/peak) / t_bound."""
+        t_useful = self.model_flops_total / self.chips / PEAK_FLOPS_BF16
+        return t_useful / max(self.t_bound, 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "bytes_per_dev": self.bytes_per_device,
+            "wire_bytes_per_dev": self.wire_bytes_per_device,
+            "useful_flops_frac": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "op_counts": self.op_counts,
+            "memory": self.memory_per_device,
+        }
+
+
+def model_flops(cfg, shape, mtp: bool = False) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE), N excluding embeddings; D =
+    tokens processed.  Train = fwd+bwd (6); prefill = fwd (2); decode =
+    one token fwd (2)."""
+    n_active = cfg.param_count(active_only=True)
+    n_embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = max(n_active - n_embed, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one new token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n * tokens

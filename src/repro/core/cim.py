@@ -1,0 +1,186 @@
+"""CIM array numerics — the Domino PE modeled in the integer domain.
+
+The Domino PE (paper §4.5) stores an 8-bit weight as eight single-level
+1T1R cells across bit lines.  Four current mirrors per 4-bit group apply
+per-bit-line significances (k/8, k/4, k/2, k); the two 4-bit groups are
+joined by a 16:1 charge redistribution between two integrators; input-bit
+significance is realized by charge averaging over the 8 bit-serial input
+cycles; one SAR ADC per column digitizes the result.
+
+On a TPU none of the analog machinery exists, so we reproduce its
+*numerics* exactly:
+
+* bit-plane decomposition + mirror significances + 16:1 group join is
+  mathematically identical to an exact int8 dot product (proved by
+  :func:`repro.kernels.ref.cim_matmul_bitplane_ref` and property tests);
+* the only true nonideality is the ADC: a per-subarray (N_c rows)
+  quantize-and-saturate step.  We model it as
+  ``q = clip(round(d * gain * Q / FS), -Q-1, Q)`` with ``FS`` the
+  subarray's full-scale dot value and ``gain`` the paper's integration
+  gain ``k`` (calibrated per layer);
+* ADC outputs are *digitally* accumulated across subarrays — this is the
+  partial-sum that Domino's Rofm adds "on the move".
+
+Everything here is pure jnp; the Pallas kernel in
+``repro/kernels/cim_matmul.py`` implements the same pipeline with
+explicit VMEM tiling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CIMSpec:
+    """Static description of one CIM crossbar (Domino Tab. 3 defaults)."""
+
+    n_c: int = 256  # rows per subarray = ADC accumulation granularity
+    n_m: int = 256  # columns (8-bit weights) per array
+    w_bits: int = 8
+    a_bits: int = 8
+    adc_bits: int = 8
+    # integration gain k (paper §4.5): scales the ADC input so the useful
+    # dot-product range fills the converter.  gain=FS/target_range.
+    gain: float = 16.0
+
+    @property
+    def q_max(self) -> int:
+        return 2 ** (self.adc_bits - 1) - 1
+
+    @property
+    def w_max(self) -> int:
+        return 2 ** (self.w_bits - 1) - 1
+
+    @property
+    def a_max(self) -> int:
+        return 2 ** (self.a_bits - 1) - 1
+
+    @property
+    def full_scale(self) -> float:
+        """Max |dot| one subarray can produce (drives the ADC range)."""
+        return float(self.n_c * self.w_max * self.a_max)
+
+    @property
+    def adc_inv_step(self) -> float:
+        """Multiplier taking an exact int32 subarray dot to ADC codes."""
+        return self.gain * self.q_max / self.full_scale
+
+    @property
+    def adc_step(self) -> float:
+        return 1.0 / self.adc_inv_step
+
+    @property
+    def lossless(self) -> bool:
+        """True if the ADC step <= 1 (no information lost)."""
+        return self.adc_step <= 1.0
+
+
+DEFAULT_SPEC = CIMSpec()
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers
+# ---------------------------------------------------------------------------
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 8,
+                       axis: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor (or per-axis) int quantization.
+
+    Returns (q, scale) with x ~= q * scale, q in int8.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def adc_quantize(d: jax.Array, spec: CIMSpec) -> jax.Array:
+    """The SAR-ADC model: round-and-saturate an exact subarray dot.
+
+    ``d`` is int32 (exact dot over <=n_c rows).  Output is int32 ADC codes
+    in [-q_max-1, q_max].
+    """
+    codes = jnp.round(d.astype(jnp.float32) * spec.adc_inv_step)
+    return jnp.clip(codes, -spec.q_max - 1, spec.q_max).astype(jnp.int32)
+
+
+def adc_dequantize(codes: jax.Array, spec: CIMSpec) -> jax.Array:
+    return codes.astype(jnp.float32) * spec.adc_step
+
+
+def calibrate_gain(x: jax.Array, w: jax.Array, spec: CIMSpec,
+                   percentile: float = 100.0) -> float:
+    """Pick the integration gain k so the `percentile` of subarray dots
+    fills the ADC range (the knob the paper's current mirrors provide).
+
+    Quantization here must mirror :func:`cim_linear_reference` exactly
+    (per-column weight scales), else the computed gain saturates the ADC.
+    """
+    xq, _ = quantize_symmetric(x.reshape(-1, x.shape[-1]), spec.a_bits)
+    wq, _ = quantize_symmetric(w, spec.w_bits, axis=0)
+    k_dim = w.shape[0]
+    pad = (-k_dim) % spec.n_c
+    if pad:
+        xq = jnp.pad(xq, ((0, 0), (0, pad)))
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    n_sub = (k_dim + pad) // spec.n_c
+    xs = xq.reshape(-1, n_sub, spec.n_c).astype(jnp.int32)
+    ws = wq.reshape(n_sub, spec.n_c, -1).astype(jnp.int32)
+    d = jnp.einsum("bsk,skn->bsn", xs, ws)
+    mag = jnp.percentile(jnp.abs(d).astype(jnp.float32), percentile)
+    mag = float(np.asarray(mag))
+    if mag <= 0:
+        return 1.0
+    return max(1.0, spec.full_scale / mag)
+
+
+# ---------------------------------------------------------------------------
+# Functional CIM matmul (jnp reference semantics; used by the simulator and
+# as the CPU fallback for CIM-quantized serving)
+# ---------------------------------------------------------------------------
+
+
+def cim_matmul(xq: jax.Array, wq: jax.Array, spec: CIMSpec = DEFAULT_SPEC) -> jax.Array:
+    """int8 x int8 -> f32 codesum through the per-subarray ADC pipeline.
+
+    xq: (..., K) int8, wq: (K, N) int8.  Returns (..., N) float32 equal to
+    ``sum_s adc_dequant(adc_quant(dot_s))`` — what the Rofm accumulates.
+    """
+    k_dim = wq.shape[0]
+    pad = (-k_dim) % spec.n_c
+    if pad:
+        xq = jnp.pad(xq, [(0, 0)] * (xq.ndim - 1) + [(0, pad)])
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    n_sub = (k_dim + pad) // spec.n_c
+    lead = xq.shape[:-1]
+    xs = xq.reshape(*lead, n_sub, spec.n_c).astype(jnp.int32)
+    ws = wq.reshape(n_sub, spec.n_c, -1).astype(jnp.int32)
+    d = jnp.einsum("...sk,skn->...sn", xs, ws)  # exact per-subarray dots
+    codes = adc_quantize(d, spec)
+    return jnp.sum(codes, axis=-2).astype(jnp.float32) * spec.adc_step
+
+
+def cim_linear_reference(x: jax.Array, w: jax.Array,
+                         spec: CIMSpec = DEFAULT_SPEC,
+                         w_scale: Optional[jax.Array] = None,
+                         wq: Optional[jax.Array] = None) -> jax.Array:
+    """Float-in/float-out CIM linear: quantize activations per-tensor,
+    weights per-column (pre-quantized if wq given), run the ADC pipeline,
+    dequantize."""
+    if wq is None:
+        wq, w_scale = quantize_symmetric(w, spec.w_bits, axis=0)
+    xq, x_scale = quantize_symmetric(x, spec.a_bits)
+    acc = cim_matmul(xq, wq, spec)
+    return acc * x_scale * w_scale.reshape((1,) * (x.ndim - 1) + (-1,))

@@ -1,0 +1,104 @@
+"""2-D mesh NoC topology model: placement, XY routing, link accounting.
+
+Used by the energy model (inter-block OFM traffic hops) and by the
+roofline sanity checks (ring vs all-reduce hop counts on the ICI-level
+analogue).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from repro.core.mapping import NetworkPlan
+
+
+@dataclass
+class MeshNoC:
+    rows: int
+    cols: int
+    link_traffic: Dict[Tuple[Tuple[int, int], Tuple[int, int]], int] = field(
+        default_factory=dict
+    )
+
+    @property
+    def num_tiles(self) -> int:
+        return self.rows * self.cols
+
+    def coord(self, tile_id: int) -> Tuple[int, int]:
+        # snake order: even rows left->right, odd rows right->left, so
+        # consecutive tiles are always physically adjacent (Domino chains)
+        r = tile_id // self.cols
+        c = tile_id % self.cols
+        if r % 2 == 1:
+            c = self.cols - 1 - c
+        return r, c
+
+    def hops(self, a: int, b: int) -> int:
+        (r1, c1), (r2, c2) = self.coord(a), self.coord(b)
+        return abs(r1 - r2) + abs(c1 - c2)
+
+    def route(self, a: int, b: int) -> List[Tuple[int, int]]:
+        """XY route as a coordinate list (X first, then Y)."""
+        (r1, c1), (r2, c2) = self.coord(a), self.coord(b)
+        path = [(r1, c1)]
+        step = 1 if c2 > c1 else -1
+        for c in range(c1 + step, c2 + step, step) if c2 != c1 else []:
+            path.append((r1, c))
+        step = 1 if r2 > r1 else -1
+        for r in range(r1 + step, r2 + step, step) if r2 != r1 else []:
+            path.append((r, c2))
+        return path
+
+    def add_traffic(self, a: int, b: int, nbytes: int) -> None:
+        path = self.route(a, b)
+        for u, v in zip(path, path[1:]):
+            key = (u, v)
+            self.link_traffic[key] = self.link_traffic.get(key, 0) + nbytes
+
+    @property
+    def max_link_bytes(self) -> int:
+        return max(self.link_traffic.values(), default=0)
+
+    @property
+    def total_byte_hops(self) -> int:
+        return sum(self.link_traffic.values())
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Blocks placed contiguously in snake order (tiles of one block are
+    adjacent; consecutive blocks abut — Domino's 'tiles placed closely')."""
+
+    noc: MeshNoC
+    block_start: Tuple[int, ...]  # first tile id of each layer block
+    block_end: Tuple[int, ...]    # last tile id (the block tail)
+
+
+def place_network(plan: NetworkPlan) -> Placement:
+    total = plan.total_tiles
+    side = math.ceil(math.sqrt(total))
+    noc = MeshNoC(rows=side, cols=side)
+    starts, ends = [], []
+    cursor = 0
+    for layer in plan.layers:
+        starts.append(cursor)
+        cursor += layer.total_tiles
+        ends.append(cursor - 1)
+    return Placement(noc=noc, block_start=tuple(starts), block_end=tuple(ends))
+
+
+def inter_block_byte_hops(plan: NetworkPlan, bytes_per_output: int = 1) -> int:
+    """OFM bytes x hops moving from each block's tail to the next block's
+    head, with the snake placement (adjacent blocks -> 1 hop typically)."""
+    placement = place_network(plan)
+    total = 0
+    for i in range(len(plan.layers) - 1):
+        src = placement.block_end[i]
+        dst = placement.block_start[i + 1]
+        hops = max(1, placement.noc.hops(src, dst))
+        out_elems = plan.layers[i].out_pixels
+        nbytes = out_elems * plan.layers[i].c_out * bytes_per_output
+        placement.noc.add_traffic(src, dst, nbytes)
+        total += nbytes * hops
+    return total

@@ -1,0 +1,300 @@
+"""Schedule-table compiler (paper §6.2).
+
+Compiles a layer + mapping into *periodic per-tile instruction tables*.
+During convolution the Rofm behaviour is periodic in the padded image
+width: we emit one C-type instruction per column phase (period
+``p = W + 2P``; the paper quotes ``2(P+W)`` because its NoC moves two
+64-bit flits per pixel slot — one IFM, one psum — at the 640 MHz link
+clock; at the 10 MHz instruction clock both land in the same table slot).
+Row-boundary gating is done by the Rifm counter/controller (paper §4.3),
+which is positional, not periodic — the compiler emits it as a per-group
+row gate.
+
+The tables drive ``core/simulator.py`` *literally*: the simulator has no
+knowledge of convolution; it only executes decoded instructions.  Tests
+prove compiled tables + tiles == ``jax.lax.conv`` exactly.
+
+Timing model (derived in the paper's Fig. 5/6 and re-derived here):
+
+* the pixel stream enters the chain in raster order, one pixel / cycle,
+  advancing one tile / cycle (systolic Rifm chain);
+* tile ``t`` with packed taps ``(i, j..j+pack-1)`` MAC-fires for output
+  column ``y`` at phase ``φ = y*s + j + pack - 1`` (it holds the earlier
+  pixels of the pack in its Rifm shift buffer — the paper's "in-buffer
+  shifting");
+* a chain psum sent by tile ``t`` is consumed by tile ``t+1`` exactly
+  ``pack`` cycles after arrival -> it waits in the W-input register queue;
+* a completed group-sum travels south to the next group's tail and waits
+  ``s * (W+2P)`` cycles in the Rofm buffer (the paper's "U1 waits in the
+  third tile until U2 is generated") -> BUF_PUSH on arrival, BUF_POP +
+  SUM_ADD on the completion phase.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.instructions import (
+    ACT_EN,
+    BUF_POP,
+    BUF_PUSH,
+    FC_MODE,
+    FROM_PE,
+    NOP,
+    POOL_MAX,
+    POOL_OUT,
+    POOL_STORE,
+    SUM_ADD,
+    TABLE_CAPACITY,
+    Instruction,
+    Opcode,
+    Port,
+)
+
+
+@dataclass(frozen=True)
+class RifmGate:
+    """The Rifm controller's positional MAC gate for one tile group.
+
+    MAC is enabled for padded row r iff (r - i) is a valid output row
+    stride multiple: (r-i) % s == 0 and 0 <= (r-i)//s < E.
+    """
+
+    tap_row: int
+    stride: int
+    e: int  # output height
+
+    def row_active(self, r: int) -> bool:
+        d = r - self.tap_row
+        return d >= 0 and d % self.stride == 0 and d // self.stride < self.e
+
+
+@dataclass(frozen=True)
+class TileProgram:
+    tile_id: int
+    tap_row: int          # i
+    tap_col: int          # first j of the packed taps
+    pack: int             # taps packed into this tile (in-buffer shifting)
+    chain_pos: int        # position along the block chain
+    table: Tuple[int, ...]  # encoded C-type instructions, len == period
+    period: int
+    gate: RifmGate
+    is_group_head: bool
+    is_group_tail: bool
+    is_block_tail: bool
+
+    def instr_at(self, phase: int) -> Instruction:
+        return Instruction.decode(self.table[phase % self.period])
+
+
+@dataclass(frozen=True)
+class TailProgram:
+    """M-type program for the block-tail Rofm (activation + pooling).
+
+    Indexed by output-pixel parity (x % pool_s, y % pool_s): period
+    pool_s * pool_s events == the paper's p = 2 * S_p at two events/slot.
+    """
+
+    table: Tuple[int, ...]
+    pool_k: int
+    pool_s: int
+    activation: Optional[str]
+
+    def instr_at(self, x: int, y: int) -> Instruction:
+        if self.pool_s == 0:
+            return Instruction.decode(self.table[0])
+        idx = (x % self.pool_s) * self.pool_s + (y % self.pool_s)
+        return Instruction.decode(self.table[idx])
+
+
+@dataclass(frozen=True)
+class BlockSchedule:
+    layer_name: str
+    k: int
+    stride: int
+    pad: int
+    c_in: int
+    c_out: int
+    h: int
+    w: int
+    pack: int
+    tiles: Tuple[TileProgram, ...]
+    tail: TailProgram
+
+    @property
+    def wp(self) -> int:
+        return self.w + 2 * self.pad
+
+    @property
+    def hp(self) -> int:
+        return self.h + 2 * self.pad
+
+    @property
+    def e(self) -> int:
+        return (self.h + 2 * self.pad - self.k + self.stride) // self.stride
+
+    @property
+    def f(self) -> int:
+        return (self.w + 2 * self.pad - self.k + self.stride) // self.stride
+
+    @property
+    def period(self) -> int:
+        return self.wp
+
+
+def _mac_phases(j0: int, pack: int, stride: int, f: int) -> List[int]:
+    """Phases (padded column indices) at which the packed tile MAC-fires."""
+    return [y * stride + j0 + pack - 1 for y in range(f)]
+
+
+def compile_conv_block(
+    name: str,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    k: int = 3,
+    stride: int = 1,
+    pad: int = 1,
+    pack: int = 1,
+    pool_k: int = 0,
+    pool_s: int = 0,
+    activation: Optional[str] = "relu",
+) -> BlockSchedule:
+    """Compile one CONV layer onto a K²×1-style chain of ceil(K/pack)*K tiles.
+
+    ``pack`` taps (along the filter row) share one tile via Rifm in-buffer
+    shifting (used when N_c > C).  Period = W + 2P must fit the 128-entry
+    schedule table (Tab. 3) — checked here like a real compiler would.
+    """
+    assert 1 <= pack <= k
+    wp = w + 2 * pad
+    f_out = (w + 2 * pad - k + stride) // stride
+    e_out = (h + 2 * pad - k + stride) // stride
+    period = wp
+    if period > TABLE_CAPACITY:
+        raise ValueError(
+            f"{name}: schedule period {period} exceeds the 16b x "
+            f"{TABLE_CAPACITY} Rofm table (paper Tab. 3); tile the IFM width"
+        )
+
+    tiles_per_row = math.ceil(k / pack)
+    tiles: List[TileProgram] = []
+    chain_len = k * tiles_per_row
+
+    for i in range(k):  # filter row == group
+        for u in range(tiles_per_row):
+            j0 = u * pack
+            this_pack = min(pack, k - j0)
+            t = i * tiles_per_row + u
+            is_head = u == 0
+            is_tail = u == tiles_per_row - 1
+            is_block_tail = t == chain_len - 1
+
+            table = [NOP] * period
+            # C-type accumulate instructions at MAC phases
+            for phase in _mac_phases(j0, this_pack, stride, f_out):
+                func = FROM_PE
+                rx = 1 << int(Port.W)  # pixels + psums arrive from the west
+                tx = 0
+                if not is_head:
+                    func |= SUM_ADD  # add the chain psum from the west queue
+                if not is_tail:
+                    tx |= 1 << int(Port.E)  # forward psum east along the row
+                else:
+                    # group tail: fold in the running group-sum from the
+                    # north (previous groups), then send south
+                    if i > 0:
+                        func |= BUF_POP
+                    if not is_block_tail:
+                        tx |= 1 << int(Port.S)
+                table[phase] = Instruction(Opcode.C, rx=rx, func=func, tx=tx)
+
+            if is_tail and i > 0:
+                # arrival phases of the running group-sum from group i-1:
+                # it arrives `stride*wp` cycles before our completion phase,
+                # i.e. at the same column phase -> BUF_PUSH rides the same
+                # slot; encode rx from N + push.
+                for phase in _mac_phases(j0, this_pack, stride, f_out):
+                    instr = Instruction.decode(table[phase].encode()) \
+                        if isinstance(table[phase], Instruction) else table[phase]
+                    table[phase] = Instruction(
+                        Opcode.C,
+                        rx=instr.rx | (1 << int(Port.N)),
+                        func=instr.func | BUF_PUSH,
+                        tx=instr.tx,
+                    )
+
+            tiles.append(
+                TileProgram(
+                    tile_id=t,
+                    tap_row=i,
+                    tap_col=j0,
+                    pack=this_pack,
+                    chain_pos=t,
+                    table=tuple(ins.encode() for ins in table),
+                    period=period,
+                    gate=RifmGate(tap_row=i, stride=stride, e=e_out),
+                    is_group_head=is_head,
+                    is_group_tail=is_tail,
+                    is_block_tail=is_block_tail,
+                )
+            )
+
+    tail = compile_tail(pool_k, pool_s, activation)
+    return BlockSchedule(
+        layer_name=name, k=k, stride=stride, pad=pad, c_in=c_in, c_out=c_out,
+        h=h, w=w, pack=pack, tiles=tuple(tiles), tail=tail,
+    )
+
+
+def compile_tail(pool_k: int, pool_s: int,
+                 activation: Optional[str]) -> TailProgram:
+    """M-type table for the block tail: activation on every output, plus the
+    paper's Fig. 9 max-pool compare/store pattern (period 2*S_p events)."""
+    act = ACT_EN if activation else 0
+    if pool_s == 0:
+        table = [Instruction(Opcode.M, func=act).encode()]
+        return TailProgram(tuple(table), 0, 0, activation)
+    assert pool_k == pool_s == 2, "paper evaluates K_p = S_p = 2"
+    table = []
+    for xpar in range(pool_s):
+        for ypar in range(pool_s):
+            func = act
+            if ypar == 0:
+                func |= POOL_STORE  # stash first column of the window
+            else:
+                func |= POOL_MAX  # compare with stashed value
+                if xpar == 0:
+                    func |= POOL_STORE  # row-max into the row buffer
+                else:
+                    func |= POOL_OUT  # emit pooled result
+            table.append(Instruction(Opcode.M, func=func).encode())
+    return TailProgram(tuple(table), pool_k, pool_s, activation)
+
+
+def compile_fc_block(name: str, c_in: int, c_out: int, n_c: int, n_m: int,
+                     activation: Optional[str] = None):
+    """FC mapping (paper Fig. 4): m_t x m_a grid; psums add down columns.
+
+    Returns (m_t, m_a, tables) where tables[i][j] is the encoded M/C table
+    for grid tile (i, j): FC_MODE + SUM_ADD chain, activation at column
+    tails.
+    """
+    m_t = math.ceil(c_in / n_c)
+    m_a = math.ceil(c_out / n_m)
+    tables = []
+    for i in range(m_t):
+        row = []
+        for j in range(m_a):
+            func = FC_MODE | FROM_PE
+            if i > 0:
+                func |= SUM_ADD
+            tx = 0 if i == m_t - 1 else (1 << int(Port.S))
+            instr = Instruction(Opcode.M, rx=(1 << int(Port.N)), func=func, tx=tx)
+            if i == m_t - 1 and activation:
+                instr = instr.with_flags(ACT_EN)
+            row.append((instr.encode(),))
+        tables.append(row)
+    return m_t, m_a, tables

@@ -1,0 +1,276 @@
+"""Functional cycle-level simulator of a Domino block.
+
+Executes convolutions *strictly from compiled instruction tables*
+(``core/schedule.py``): the simulator knows nothing about convolution —
+each cycle it decodes the tile's periodic C-type instruction, applies the
+Rifm row gate, moves packets one hop per cycle, and lets the block-tail
+M-type program do activation/pooling.  Tests assert the emitted OFM
+equals ``jax.lax.conv_general_dilated`` exactly, which is the paper's
+correctness claim for the "computing-on-the-move" dataflow (Figs. 5/6/9).
+
+Micro-architecture modeled per tile (paper Fig. 2):
+
+* **Rifm**: systolic pixel pipeline (1 tile/cycle) + shift buffer holding
+  the last ``pack`` pixels (in-buffer shifting) + positional MAC gate;
+* **PE**: MAC over the tile's packed taps — exact fp, or the CIM pipeline
+  (``core/cim.py``) when a ``CIMSpec`` is supplied;
+* **Rofm**: W-input register queue (chain psums), the Rofm buffer
+  (group-sums waiting for peers), adder, and the tail computation unit
+  (activation + pooling comparator).
+
+Event counters feed the analytic energy model and are cross-validated
+against its closed-form counts in tests.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cim import CIMSpec
+from repro.core.instructions import (
+    ACT_EN,
+    BUF_POP,
+    BUF_PUSH,
+    FROM_PE,
+    POOL_MAX,
+    POOL_OUT,
+    POOL_STORE,
+    SUM_ADD,
+    Instruction,
+    Opcode,
+)
+from repro.core.schedule import BlockSchedule, TileProgram, compile_fc_block
+
+
+@dataclass
+class SimCounters:
+    macs: int = 0
+    chain_hops: int = 0       # psum packets moving tile->tile within a group
+    group_hops: int = 0       # group-sum packets moving between group tails
+    buf_push: int = 0
+    buf_pop: int = 0
+    act_ops: int = 0
+    pool_ops: int = 0
+    cycles: int = 0
+    instr_fetches: int = 0
+
+
+_ACT = {
+    None: lambda v: v,
+    "relu": lambda v: np.maximum(v, 0.0),
+    "identity": lambda v: v,
+}
+
+
+class _Tile:
+    def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int):
+        self.prog = prog
+        self.weights = weights  # (pack, C, M) for this tile's taps
+        self.fifo_w: deque = deque()  # chain psums from the west
+        self.fifo_n: deque = deque()  # running group-sums from the north
+        self.buffer: deque = deque()  # the Rofm buffer
+        self.shift_buf: deque = deque(maxlen=pack_span)  # Rifm in-buffer shift
+
+
+class BlockSimulator:
+    """Simulates one compiled CONV block on one IFM."""
+
+    def __init__(self, sched: BlockSchedule, weights: np.ndarray,
+                 bias: Optional[np.ndarray] = None,
+                 cim_spec: Optional[CIMSpec] = None):
+        """weights: (K, K, C, M) float; bias: (M,)."""
+        k = sched.k
+        assert weights.shape[:2] == (k, k)
+        self.sched = sched
+        self.bias = bias
+        self.cim_spec = cim_spec
+        self.counters = SimCounters()
+        self.tiles: List[_Tile] = []
+        for prog in sched.tiles:
+            taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack]
+            self.tiles.append(_Tile(prog, np.asarray(taps, np.float64),
+                                    pack_span=prog.pack))
+        # deliveries[(cycle, tile_id, port)] -> list of packets
+        self._deliveries: Dict[Tuple[int, int, str], List[np.ndarray]] = defaultdict(list)
+        # tail pooling state
+        self._pool_tmp: Optional[np.ndarray] = None
+        self._pool_row: Dict[int, np.ndarray] = {}
+        self._outputs: List[np.ndarray] = []
+        self._pooled: List[np.ndarray] = []
+
+    # -- PE ------------------------------------------------------------------
+
+    def _pe_mac(self, tile: _Tile) -> np.ndarray:
+        """MAC over the packed taps against the Rifm shift buffer."""
+        pack = tile.prog.pack
+        pixels = list(tile.shift_buf)[-pack:]
+        acc = np.zeros(self.sched.c_out, np.float64)
+        for d, px in enumerate(pixels):
+            w_tap = tile.weights[d]  # (C, M)
+            if self.cim_spec is None:
+                acc += px @ w_tap
+            else:
+                from repro.core.cim import cim_linear_reference
+                import jax.numpy as jnp
+                acc += np.asarray(
+                    cim_linear_reference(
+                        jnp.asarray(px[None, :], jnp.float32),
+                        jnp.asarray(w_tap, jnp.float32),
+                        self.cim_spec,
+                    )
+                )[0].astype(np.float64)
+            self.counters.macs += px.shape[0] * w_tap.shape[1]
+        return acc
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self, ifm: np.ndarray) -> np.ndarray:
+        """ifm: (H, W, C) -> OFM (E, F, M) after activation (+pooling)."""
+        s = self.sched
+        assert ifm.shape == (s.h, s.w, s.c_in)
+        padded = np.zeros((s.hp, s.wp, s.c_in), np.float64)
+        padded[s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
+        stream = padded.reshape(-1, s.c_in)  # raster order
+        n_pix = stream.shape[0]
+        chain = len(self.tiles)
+        tiles_per_row = chain // s.k
+        total_cycles = n_pix + chain + chain  # drain margin
+
+        for cyc in range(total_cycles):
+            self.counters.cycles += 1
+            # deliver packets scheduled for this cycle
+            for tid, tile in enumerate(self.tiles):
+                for port, fifo in (("W", tile.fifo_w), ("N", tile.fifo_n)):
+                    key = (cyc, tid, port)
+                    if key in self._deliveries:
+                        fifo.extend(self._deliveries.pop(key))
+
+            for tid, tile in enumerate(self.tiles):
+                q = cyc - tid  # pixel index currently at this tile
+                if not (0 <= q < n_pix):
+                    continue
+                r, c = divmod(q, s.wp)
+                tile.shift_buf.append(stream[q])  # Rifm pipeline latch
+                if c == 0:
+                    # row restart: in-buffer shift state resets with the row
+                    tile.shift_buf.clear()
+                    tile.shift_buf.append(stream[q])
+
+                instr = tile.prog.instr_at(c)
+                self.counters.instr_fetches += 1
+                if instr.is_nop:
+                    continue
+
+                gate = tile.prog.gate.row_active(r)
+                acc = np.zeros(s.c_out, np.float64)
+                produced = False
+
+                if instr.has(BUF_PUSH) and tile.fifo_n:
+                    tile.buffer.append(tile.fifo_n.popleft())
+                    self.counters.buf_push += 1
+
+                if gate:
+                    if instr.has(FROM_PE):
+                        acc += self._pe_mac(tile)
+                        produced = True
+                    if instr.has(SUM_ADD) and tile.fifo_w:
+                        acc += tile.fifo_w.popleft()
+                        produced = True
+                    if instr.has(BUF_POP) and tile.buffer:
+                        acc += tile.buffer.popleft()
+                        self.counters.buf_pop += 1
+                        produced = True
+
+                if not produced:
+                    continue
+
+                from repro.core.instructions import Port as _P
+
+                if instr.tx_to(_P.E):
+                    self._deliveries[(cyc + 1, tid + 1, "W")].append(acc)
+                    self.counters.chain_hops += 1
+                elif instr.tx_to(_P.S):
+                    nxt = tid + tiles_per_row  # next group tail
+                    hops = tiles_per_row
+                    self._deliveries[(cyc + hops, nxt, "N")].append(acc)
+                    self.counters.group_hops += hops
+                elif tile.prog.is_block_tail:
+                    self._emit(acc)
+
+        out = np.stack(self._outputs).reshape(s.e, s.f, s.c_out)
+        if self.sched.tail.pool_s:
+            ep, fp = s.e // self.sched.tail.pool_s, s.f // self.sched.tail.pool_s
+            return np.stack(self._pooled).reshape(ep, fp, s.c_out)
+        return out
+
+    # -- tail unit (M-type program) --------------------------------------------
+
+    def _emit(self, val: np.ndarray) -> None:
+        s = self.sched
+        idx = len(self._outputs)
+        x, y = divmod(idx, s.f)
+        instr = s.tail.instr_at(x, y)
+        assert instr.opcode == Opcode.M
+        if self.bias is not None:
+            val = val + self.bias
+        if instr.has(ACT_EN):
+            val = _ACT[s.tail.activation](val)
+            self.counters.act_ops += val.shape[0]
+        self._outputs.append(val)
+        if s.tail.pool_s:
+            self._pool_step(instr, x, y, val)
+
+    def _pool_step(self, instr: Instruction, x: int, y: int,
+                   val: np.ndarray) -> None:
+        """Fig. 9(c): compare-on-the-move max pooling in the tail Rofm."""
+        if instr.has(POOL_STORE) and not instr.has(POOL_MAX):
+            self._pool_tmp = val  # first column of the window
+            return
+        if instr.has(POOL_MAX):
+            self.counters.pool_ops += val.shape[0]
+            rowmax = np.maximum(self._pool_tmp, val)
+            if instr.has(POOL_STORE):
+                self._pool_row[y // 2] = rowmax  # stash row maximum
+            if instr.has(POOL_OUT):
+                self._pooled.append(np.maximum(self._pool_row[y // 2], rowmax))
+
+
+# ---------------------------------------------------------------------------
+# FC block simulation (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
+                activation: Optional[str] = None,
+                counters: Optional[SimCounters] = None) -> np.ndarray:
+    """Partitioned MVM on an m_t x m_a tile grid, psums added down columns.
+
+    x: (c_in,), w: (c_in, c_out).  Driven by compile_fc_block tables.
+    """
+    c_in, c_out = w.shape
+    m_t, m_a, tables = compile_fc_block("fc", c_in, c_out, n_c, n_m, activation)
+    cnt = counters if counters is not None else SimCounters()
+    out = np.zeros(c_out, np.float64)
+    for j in range(m_a):  # columns compute in parallel; python loop for sim
+        n0, n1 = j * n_m, min((j + 1) * n_m, c_out)
+        psum = np.zeros(n1 - n0, np.float64)
+        for i in range(m_t):
+            instr = Instruction.decode(tables[i][j][0])
+            k0, k1 = i * n_c, min((i + 1) * n_c, c_in)
+            acc = np.zeros(n1 - n0, np.float64)
+            if instr.has(FROM_PE):
+                acc += x[k0:k1] @ w[k0:k1, n0:n1]
+                cnt.macs += (k1 - k0) * (n1 - n0)
+            if instr.has(SUM_ADD) and i > 0:
+                acc += psum
+            psum = acc
+            if i < m_t - 1:
+                cnt.chain_hops += 1
+            if instr.has(ACT_EN):
+                psum = _ACT[activation or "identity"](psum)
+                cnt.act_ops += psum.shape[0]
+        out[n0:n1] = psum
+    return out

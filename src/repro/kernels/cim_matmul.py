@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Domino CIM crossbar matmul (w8a8 + per-subarray ADC).
+
+One grid step along K processes exactly one CIM subarray (``n_c`` rows =
+the ADC accumulation granularity), so the kernel's arithmetic *is* the
+array's: an exact int8xint8->int32 dot over n_c rows (the MXU analogue of
+the bit-line/current-mirror/charge-share pipeline — see
+``kernels/ref.cim_matmul_bitplane_ref`` for the circuit-level proof of
+equivalence), followed by the SAR-ADC round/saturate, followed by digital
+accumulation of ADC codes (what Domino's Rofm adds "on the move").
+
+Tiling: x (bm, n_c) and w (n_c, bn) blocks live in VMEM; the f32 output
+block doubles as the code accumulator (codes are integers, exactly
+representable in f32 far beyond any realistic K).  MXU-aligned defaults:
+bm = bn = 256, n_c = 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are a no-op under interpret mode
+    from jax.experimental.pallas import tpu as pltpu
+
+    _COMPILER_PARAMS = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+except Exception:  # pragma: no cover - non-TPU builds
+    _COMPILER_PARAMS = None
+
+from repro.core.cim import CIMSpec, DEFAULT_SPEC
+
+
+def _cim_kernel(x_ref, w_ref, o_ref, *, nk: int, inv_step: float, step: float,
+                q_max: int):
+    """One (bm, bn) output block; K-steps iterate subarrays."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # exact integer dot over one subarray (n_c rows) — MXU int8 path
+    d = jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # SAR ADC: round & saturate to adc_bits codes
+    codes = jnp.clip(
+        jnp.round(d.astype(jnp.float32) * inv_step),
+        -float(q_max + 1), float(q_max),
+    )
+    # digital accumulation of codes (integers — exact in f32)
+    o_ref[...] += codes
+
+    @pl.when(k == nk - 1)
+    def _scale():
+        o_ref[...] *= step
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "block_m", "block_n", "interpret")
+)
+def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
+                      spec: CIMSpec = DEFAULT_SPEC,
+                      block_m: int = 256, block_n: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) f32 through the CIM pipeline.
+
+    Pads every dim to its block multiple; K blocks are ``spec.n_c`` wide so
+    each K-step is one subarray.  ``interpret=True`` runs the kernel body
+    in Python on CPU (validation target); on a real TPU pass False.
+    """
+    m, k_dim = xq.shape
+    k2, n = wq.shape
+    assert k_dim == k2, (xq.shape, wq.shape)
+    n_c = spec.n_c
+
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k_dim, n_c), _round_up(n, bn)
+    if (mp, kp) != (m, k_dim):
+        xq = jnp.pad(xq, ((0, mp - m), (0, kp - k_dim)))
+    if (kp, np_) != (k_dim, n):
+        wq = jnp.pad(wq, ((0, kp - k_dim), (0, np_ - n)))
+
+    nk = kp // n_c
+    grid = (mp // bm, np_ // bn, nk)
+
+    kernel = functools.partial(
+        _cim_kernel, nk=nk, inv_step=spec.adc_inv_step, step=spec.adc_step,
+        q_max=spec.q_max,
+    )
+    kwargs = {}
+    if _COMPILER_PARAMS is not None and not interpret:
+        kwargs["compiler_params"] = _COMPILER_PARAMS
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n_c), lambda i, j, k: (i, k)),
+            pl.BlockSpec((n_c, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(xq, wq)
+    return out[:m, :n]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

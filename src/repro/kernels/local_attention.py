@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: sliding-window (local) causal flash attention.
+
+The compute hot spot of gemma-2/3's local layers (5/6 of gemma3's depth
+attends within a 512 window).  Block-tiled flash: the grid walks
+(batch*heads, q_blocks, window_blocks); each step streams one KV block
+of the window through VMEM with the running-max/denominator recurrence,
+so HBM traffic is O(S * window) and VMEM holds one (bq, d) + (bk, d)
+tile pair — the Domino discipline (stream inputs past resident state,
+merge partial results on the move) applied to attention.
+
+Oracle: ``kernels/ref.local_attention_ref``; validated in
+tests/test_local_attention.py over shape/window sweeps (interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 nspan: int, block_q: int, block_k: int, window: int,
+                 scale: float, softcap):
+    """One (q_block, kv_block-within-window) step."""
+    qi = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (block_q, d)
+    k = k_ref[0]  # (block_k, d)
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    # global positions of this tile (kv block index = qi - (nspan-1) + j,
+    # clamped at 0 by the index_map; reproduce the same clamp here)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    # kv span anchors at the block of the *last* query position
+    unclamped = (qi * block_q + block_q - 1) // block_k - (nspan - 1) + j
+    kv_blk = jnp.maximum(unclamped, 0)
+    k_pos = kv_blk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    # the index_map clamps negative kv blocks to 0 — those grid steps are
+    # duplicate visits of block 0 and must contribute nothing
+    mask = mask & (unclamped >= 0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nspan - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_q", "block_k", "interpret"))
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int, softcap=None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q/k/v: (BH, S, D) — batch*heads flattened (GQA repeat done by the
+    caller / ops wrapper).  Causal, attends to (i-window, i]."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    pad = (-s) % block_q
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+    else:
+        qp = q
+    sq = s + pad
+    pad_k = (-s) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
+
+    # kv blocks each q block must visit: enough to cover (window + block_q)
+    nspan = int(math.ceil(window / block_k)) + int(
+        math.ceil(block_q / block_k)) + 1
+    nspan = min(nspan, (s + pad_k) // block_k)
+    grid = (bh, sq // block_q, nspan)
+
+    kernel = functools.partial(
+        _attn_kernel, nspan=nspan, block_q=block_q, block_k=block_k,
+        window=window, scale=d ** -0.5, softcap=softcap)
+
+    def kv_index(b, i, j):
+        # clamp at block 0; masked out in-kernel for the clamped repeats
+        base = (i * block_q + block_q - 1) // block_k
+        return (b, jnp.maximum(base - (nspan - 1) + j, 0), 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),   # running max m
+            _vmem((block_q, 1), jnp.float32),   # running denominator l
+            _vmem((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

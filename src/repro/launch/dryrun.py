@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+"""Multi-pod dry-run driver.
+
+Lowers + compiles train_step / serve_step for every (architecture x
+input-shape) cell on the production meshes:
+
+  * single-pod: 16 x 16 = 256 chips, axes (data, model)
+  * multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model)
+
+and records memory_analysis / cost_analysis / collective statistics for
+the roofline report (EXPERIMENTS.md).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      [--arch qwen2-0.5b ...] [--shape train_4k ...] \
+      [--mesh single|multi|both] [--reduction ring|allreduce] \
+      [--out results/dryrun.json]
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--reduction", choices=["ring", "allreduce"],
+                    default="ring")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+    from repro.launch.dryrun_lib import run_matrix
+    from repro.launch.mesh import make_production_mesh
+
+    archs = args.arch or list(ASSIGNED_ARCHS)
+    shapes = args.shape or list(SHAPES)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2xpod16x16", make_production_mesh(multi_pod=True)))
+
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        results = run_matrix(archs, shapes, mesh, mesh_name, args.out,
+                             reduction=args.reduction)
+        n_fail += sum(1 for r in results.values()
+                      if r.get("status") == "fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

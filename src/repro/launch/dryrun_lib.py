@@ -1,0 +1,211 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (zero allocation), extract memory / cost /
+collective statistics, and emit the roofline row.
+
+Importable without touching jax device state — the 512-device env setup
+lives in ``dryrun.py`` (whose first two lines set XLA_FLAGS before any
+jax import, per the deployment contract).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+import traceback
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import Roofline, collective_bytes, model_flops
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+from repro.launch.inputs import decode_token_spec, train_input_specs
+from repro.runtime.serve_loop import build_serve_program
+from repro.runtime.train_loop import build_train_program
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, dp: int,
+                      budget_bytes: float = 2.5e9) -> int:
+    """Pick grad-accumulation so the remat residual stack fits:
+    (B/dp/mb) * S * d_model * L * 2B <= budget."""
+    b_local = max(1, shape.global_batch // dp)
+    per_seq = shape.seq_len * cfg.d_model * 2 * (cfg.num_layers
+                                                 + cfg.encoder_layers)
+    mb = 1
+    while b_local // mb > 1 and (b_local / mb) * per_seq > budget_bytes:
+        mb *= 2
+    mb = min(mb, b_local)
+    while shape.global_batch % (dp * mb):
+        mb //= 2
+    return max(mb, 1)
+
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    # Adam state for 671B (12 B/param) cannot fit the pod: Adafactor with
+    # factored second moment (T5X practice).  bf16 moments elsewhere.
+    if cfg.param_count() > 100e9:
+        return TrainConfig(optimizer="adafactor", moment_dtype="float32")
+    return TrainConfig(optimizer="adamw", moment_dtype="bfloat16")
+
+
+def parallel_config_for(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                        reduction: str = "ring",
+                        remat: str = "full") -> ParallelConfig:
+    dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a, n in sizes.items():
+        if a != "model":
+            dp *= n
+    kv_dtype = "bfloat16"
+    if shape.kind == "decode" and cfg.param_count() > 100e9:
+        kv_dtype = "int8"  # MLA latent cache at 32k x 128 batch
+    return ParallelConfig(
+        reduction=reduction,
+        remat=remat,
+        microbatches=(auto_microbatches(cfg, shape, dp)
+                      if shape.kind == "train" else 1),
+        zero_axes=tuple(mesh.axis_names),
+        kv_cache_dtype=kv_dtype,
+        cim_weights=shape.kind != "train",
+        # FSDP-style param gathering for >100B training (84 GB/dev of
+        # bf16 params otherwise)
+        zero3=shape.kind == "train" and cfg.param_count() > 100e9,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               reduction: str = "ring", remat: str = "full",
+               pcfg: Optional[ParallelConfig] = None,
+               cfg: Optional[ModelConfig] = None):
+    """-> (lowered, compiled, meta) for one cell."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    pcfg = pcfg or parallel_config_for(cfg, shape, mesh, reduction, remat)
+
+    if shape.kind == "train":
+        tcfg = train_config_for(cfg)
+        prog = build_train_program(cfg, mesh, pcfg, tcfg)
+        p_sds, o_sds = jax.eval_shape(prog.init_fn, 0)
+        batch_sds = train_input_specs(cfg, shape)
+        lowered = prog.step_fn.lower(p_sds, o_sds, batch_sds)
+    else:
+        prog = build_serve_program(
+            cfg, mesh, pcfg, batch=shape.global_batch, s_max=shape.seq_len,
+            kv_dtype=pcfg.kv_cache_dtype, cim_weights=pcfg.cim_weights)
+        p_sds = _serve_param_sds(prog, cfg, pcfg)
+        if shape.kind == "prefill":
+            batch_sds = train_input_specs(cfg, shape)
+            batch_sds.pop("labels")
+            lowered = jax.jit(prog.prefill_fn).lower(p_sds, batch_sds)
+        else:  # decode: one token against a seq_len cache
+            cache_sds = prog.cache_global_sds
+            token_sds = decode_token_spec(shape)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(prog.decode_fn).lower(
+                p_sds, token_sds, cache_sds, pos_sds)
+    compiled = lowered.compile()
+    return lowered, compiled, {"pcfg": pcfg, "shape": shape, "cfg": cfg}
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _serve_param_sds(prog, cfg, pcfg):
+    from repro.models import encdec as ED
+    from repro.models import transformer as T
+    from repro.runtime.serve_loop import (
+        quantize_decisions,
+        quantize_params_for_serving,
+    )
+    init = ED.init_params if cfg.is_encdec else T.init_params
+
+    def make(k):
+        params = init(k, cfg, prog.plan.as_global())
+        if pcfg.cim_weights:
+            raw = params
+            dec = quantize_decisions(raw)
+            params = quantize_params_for_serving(params, decisions=dec)
+        return params
+
+    return jax.eval_shape(make, jax.random.PRNGKey(0))
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, compiled, mesh_name: str
+                 ) -> Dict[str, Any]:
+    from repro.analysis.hlo_stats import analyze_hlo
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = int(mesh.devices.size)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    txt = compiled.as_text()
+    model_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    # loop-aware stats: cost_analysis counts while bodies once; the HLO
+    # parser applies trip-count multipliers (validated exact in tests)
+    stats = analyze_hlo(txt, default_group=model_axis)
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_device=float(stats.flops),
+        bytes_per_device=float(stats.hbm_bytes),
+        wire_bytes_per_device=float(stats.wire_bytes),
+        model_flops_total=model_flops(cfg, shape),
+        chips=chips,
+        op_counts={k: int(v) for k, v in stats.op_counts.items()},
+        memory_per_device={
+            "args_GB": mem.argument_size_in_bytes / 1e9,
+            "temp_GB": mem.temp_size_in_bytes / 1e9,
+            "out_GB": mem.output_size_in_bytes / 1e9,
+            "total_GB": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes) / 1e9,
+        },
+    )
+    return rl.row()
+
+
+def run_matrix(archs, shape_names, mesh, mesh_name: str, out_path: str,
+               reduction: str = "ring") -> Dict[str, Any]:
+    """Lower+compile every applicable cell; stream results to JSON."""
+    results: Dict[str, Any] = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    for arch in archs:
+        for shape_name in shape_names:
+            key = f"{arch}|{shape_name}|{mesh_name}|{reduction}"
+            if key in results and results[key].get("status") == "ok":
+                continue
+            t0 = time.time()
+            try:
+                _, compiled, _ = lower_cell(arch, shape_name, mesh,
+                                            reduction=reduction)
+                row = analyze_cell(arch, shape_name, mesh, compiled,
+                                   mesh_name)
+                row["status"] = "ok"
+                row["reduction"] = reduction
+                row["compile_s"] = time.time() - t0
+                del compiled
+            except SkipCell as e:
+                row = {"status": "skip", "reason": str(e), "arch": arch,
+                       "shape": shape_name, "mesh": mesh_name}
+            except Exception as e:  # noqa: BLE001 — record and continue
+                row = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:],
+                       "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "compile_s": time.time() - t0}
+            results[key] = row
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+            print(f"[{time.strftime('%H:%M:%S')}] {key}: "
+                  f"{row['status']} ({row.get('compile_s', 0):.1f}s)",
+                  flush=True)
+    return results

@@ -1,0 +1,37 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero device allocation.  This is the only
+way the FULL configs are ever touched off-TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend is not None and cfg.frontend.kind == "vit_stub":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend.num_tokens, cfg.frontend.embed_dim), jnp.bfloat16)
+    if cfg.is_encdec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.frontend.embed_dim), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    return train_input_specs(cfg, shape) if not cfg.is_encdec else {
+        k: v for k, v in train_input_specs(cfg, shape).items()
+    }
+
+
+def decode_token_spec(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)

@@ -1,0 +1,107 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      [--steps 100] [--batch 8] [--seq 256] [--reduced] \
+      [--reduction ring|allreduce] [--ckpt-dir /tmp/ckpt] [--resume]
+
+On this CPU container it runs reduced configs on a host mesh; on a real
+pod the same driver runs the full config on the production mesh.
+Includes: deterministic restart (checkpoint + data replay), straggler
+monitoring, step-guard retry.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--reduction", default="ring",
+                    choices=["ring", "allreduce"])
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.data.pipeline import spec_for, synthetic_batch, DataSpec
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.fault import StepGuard, StragglerMonitor
+    from repro.runtime.partition import shardings_from_specs
+    from repro.runtime.train_loop import build_train_program
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    pcfg = ParallelConfig(reduction=args.reduction, remat="full",
+                          microbatches=args.microbatches)
+    tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr,
+                       warmup_steps=max(2, args.steps // 20),
+                       total_steps=args.steps, seed=args.seed)
+    prog = build_train_program(cfg, mesh, pcfg, tcfg)
+    params, state = prog.init_fn(args.seed)
+
+    spec = DataSpec(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch, seed=args.seed,
+                    frontend_kind=cfg.frontend.kind if cfg.frontend else "none",
+                    frontend_dim=cfg.frontend.embed_dim if cfg.frontend else 0,
+                    frontend_tokens=cfg.frontend.num_tokens if cfg.frontend else 0,
+                    encdec=cfg.is_encdec)
+
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        if args.resume and mgr.latest_step() is not None:
+            shardings = {
+                "params": shardings_from_specs(mesh, prog.param_specs)}
+            restored, start_step = mgr.restore(
+                {"params": params}, shardings={"params": None})
+            params = restored["params"]
+            print(f"resumed from step {start_step}")
+
+    monitor = StragglerMonitor()
+    guard = StepGuard(recover=lambda s: print(f"recover to step {s}"))
+
+    for step in range(start_step, args.steps):
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in synthetic_batch(spec, step).items()}
+        t0 = time.time()
+        params, state, metrics = guard.run(
+            prog.step_fn, step, params, state, batch)
+        dt = time.time() - t0
+        if monitor.observe(step, dt):
+            print(f"straggler escalation advised at step {step}")
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms",
+                  flush=True)
+        if mgr and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params})
+    if mgr:
+        mgr.save(args.steps, {"params": params}, blocking=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

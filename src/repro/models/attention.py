@@ -1,0 +1,500 @@
+"""Attention: GQA (with RoPE, sliding windows, logit softcaps, QKV bias)
+and MLA (DeepSeek-V3 latent attention with the absorbed-matmul decode).
+
+Three execution paths, all per-device (manual SPMD):
+* ``forward``   — train / prefill over a full (seq-sharded) stream;
+  optionally emits the KV cache (prefill).
+* ``decode``    — one token against the cache.
+
+Head sharding rules (see DESIGN.md):
+* ``plan.attn_sharded``   (H % tp == 0): query heads sharded over tp.
+* ``plan.kv_sharded``     (KV % tp == 0): kv heads sharded too; otherwise
+  the *group trick*: each device computes the full (small) KV projection
+  and keeps only its group's head — the cache stores exactly what the
+  device attends with, nothing more.
+* not attn_sharded (tiny models: gemma3 H=4, qwen2 H=14 on tp=16):
+  attention runs replicated; only the MLPs are sharded.  The weights are
+  small precisely in these cases.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import dataflow
+from repro.models.common import (
+    ShardingPlan,
+    dense_init,
+    down,
+    flash_attention,
+    local_linear,
+    psum_if,
+    rms_norm,
+    rope,
+    softcap,
+    up,
+)
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (Domino: 8-bit residency)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """(..., S, D) -> int8 values + per-(...,S) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, plan: ShardingPlan, dtype):
+    a = cfg.attention
+    d, hd = cfg.d_model, a.head_dim
+    hl = plan.heads_local(cfg)
+    kv_store = stored_kv_heads(cfg, plan)
+    kq, kk, kv_, ko, kb = jax.random.split(key, 5)
+    kv_out = (plan.kv_local(cfg) if plan.kv_sharded else a.num_kv_heads)
+    p = {
+        "wq": dense_init(kq, d, (d, hl * hd), dtype),
+        "wk": dense_init(kk, d, (d, kv_out * hd), dtype),
+        "wv": dense_init(kv_, d, (d, kv_out * hd), dtype),
+        "wo": dense_init(ko, hl * hd, (hl * hd, d), dtype),
+    }
+    if a.qkv_bias:
+        b1, b2, b3 = jax.random.split(kb, 3)
+        p["bq"] = jnp.zeros((hl * hd,), dtype)
+        p["bk"] = jnp.zeros((kv_out * hd,), dtype)
+        p["bv"] = jnp.zeros((kv_out * hd,), dtype)
+    return p
+
+
+def stored_kv_heads(cfg: ModelConfig, plan: ShardingPlan) -> int:
+    """KV heads held per device (== what its queries need)."""
+    a = cfg.attention
+    if not plan.attn_sharded:
+        return a.num_kv_heads
+    if plan.kv_sharded:
+        return a.num_kv_heads if plan.global_shapes \
+            else a.num_kv_heads // plan.tp
+    # group trick: each device keeps its group's head; globally the cache
+    # is the tp-way group-repeated layout (per-device bytes unchanged)
+    return plan.tp if plan.global_shapes else 1
+
+
+def _group_slice(k_full, cfg, plan, hd):
+    """Slice this device's kv group head out of the full KV projection."""
+    a = cfg.attention
+    hl = plan.heads_local(cfg)
+    group = (plan.tp_index() * hl) // (a.num_heads // a.num_kv_heads)
+    return lax.dynamic_slice_in_dim(k_full, group * hd, hd, axis=-1)
+
+
+def gqa_forward(p, x, cfg: ModelConfig, layer_idx: int, plan: ShardingPlan,
+                positions, want_cache: bool = False,
+                kv_dtype: str = "bfloat16", causal: bool = True):
+    """x: (B, S_local, D) seq-sharded (or full when plan.seq_shard off).
+    Returns (out seq-sharded, cache | None)."""
+    a = cfg.attention
+    hd = a.head_dim
+    b = x.shape[0]
+
+    if not plan.attn_sharded and plan.tp > 1:
+        # replicated attention over the gathered stream
+        xg = lax.all_gather(x, plan.tp_axis, axis=1, tiled=True)
+        out, cache = _gqa_core(p, xg, cfg, layer_idx, plan, positions,
+                               want_cache, kv_dtype, replicated=True,
+                               causal=causal)
+        # back to the sequence shard: local slice, no collective
+        chunk = out.shape[1] // plan.tp
+        out = lax.dynamic_slice_in_dim(
+            out, plan.tp_index() * chunk, chunk, axis=1)
+        return out, cache
+    return _gqa_core(p, x, cfg, layer_idx, plan, positions, want_cache,
+                     kv_dtype, replicated=False, causal=causal)
+
+
+def _gqa_core(p, x, cfg, layer_idx, plan, positions, want_cache, kv_dtype,
+              replicated: bool, causal: bool = True):
+    a = cfg.attention
+    hd = a.head_dim
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    kv_store = stored_kv_heads(cfg, plan)
+
+    if replicated or plan.tp == 1:
+        q = local_linear(x, p["wq"], p.get("bq"))
+        k = local_linear(x, p["wk"], p.get("bk"))
+        v = local_linear(x, p["wv"], p.get("bv"))
+    else:
+        tail_q = (lambda t: t + p["bq"]) if "bq" in p else None
+        tail_k = (lambda t: t + p["bk"]) if "bk" in p else None
+        tail_v = (lambda t: t + p["bv"]) if "bv" in p else None
+        q = up(x, p["wq"], plan, tail=tail_q)
+        k = up(x, p["wk"], plan, tail=tail_k)
+        v = up(x, p["wv"], plan, tail=tail_v)
+        if not plan.kv_sharded:  # group trick: keep only our kv head
+            k = _group_slice(k, cfg, plan, hd)
+            v = _group_slice(v, cfg, plan, hd)
+
+    s = q.shape[1]
+    q = q.reshape(b, s, hl, hd)
+    k = k.reshape(b, s, kv_store, hd)
+    v = v.reshape(b, s, kv_store, hd)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+
+    window = a.layer_window(layer_idx)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        logit_softcap=a.softcap)
+    o = o.reshape(b, s, hl * hd)
+
+    if replicated or plan.tp == 1:
+        out = local_linear(o, p["wo"])
+        if plan.tp > 1 and not replicated:
+            out = psum_if(out, plan)
+    else:
+        out = down(o, p["wo"], plan)
+
+    cache = None
+    if want_cache:
+        if kv_dtype == "int8":
+            kq_, ks = quantize_kv(k)
+            vq_, vs = quantize_kv(v)
+            cache = {"k": kq_, "k_scale": ks, "v": vq_, "v_scale": vs}
+        else:
+            cache = {"k": k, "v": v}
+    return out, cache
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, layer_idx: int,
+               plan: ShardingPlan, kv_dtype: str = "bfloat16"):
+    """x: (B, 1, D) replicated over tp.  cache k/v: (B, S_max, KV_store, hd).
+    Returns ((B, 1, D) fully reduced, updated cache)."""
+    a = cfg.attention
+    hd = a.head_dim
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    kv_store = stored_kv_heads(cfg, plan)
+
+    q = local_linear(x, p["wq"], p.get("bq")).reshape(b, 1, hl, hd)
+    k_new = local_linear(x, p["wk"], p.get("bk"))
+    v_new = local_linear(x, p["wv"], p.get("bv"))
+    if plan.attn_sharded and not plan.kv_sharded and plan.tp > 1:
+        k_new = _group_slice(k_new, cfg, plan, hd)
+        v_new = _group_slice(v_new, cfg, plan, hd)
+    k_new = k_new.reshape(b, 1, kv_store, hd)
+    v_new = v_new.reshape(b, 1, kv_store, hd)
+
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, a.rope_theta)
+    k_new = rope(k_new, posv, a.rope_theta)
+
+    window = a.layer_window(layer_idx)
+
+    if use_seq_cache(cfg, plan, window):
+        # sequence-sharded cache: only the owning chunk writes; partial
+        # softmax stats merge via LSE across the tp axis.
+        chunk = cache["k"].shape[1]
+        i = plan.tp_index()
+        owner = pos // chunk
+        slot = pos % chunk
+
+        def write(arr, new):
+            upd = lax.dynamic_update_slice_in_dim(arr, new, slot, 1)
+            return jnp.where(owner == i, upd, arr)
+
+        cache = dict(cache)
+        if kv_dtype == "int8":
+            kq_, ks = quantize_kv(k_new)
+            vq_, vs = quantize_kv(v_new)
+            cache["k"] = write(cache["k"], kq_)
+            cache["v"] = write(cache["v"], vq_)
+            cache["k_scale"] = write(cache["k_scale"], ks)
+            cache["v_scale"] = write(cache["v_scale"], vs)
+            k_all = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+            v_all = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+        else:
+            cache["k"] = write(cache["k"], k_new)
+            cache["v"] = write(cache["v"], v_new)
+            k_all, v_all = cache["k"], cache["v"]
+        o = _seq_sharded_decode_attention(q, k_all, v_all, pos, plan, hd,
+                                          a.softcap)
+        out = local_linear(o.reshape(b, 1, hl * hd), p["wo"])
+        return out, cache  # weights replicated: no psum needed
+
+    s_max = cache["k"].shape[1]
+    if kv_dtype == "int8":
+        slot = pos if window is None else pos % _ring_len(window, s_max)
+        kq_, ks = quantize_kv(k_new)
+        vq_, vs = quantize_kv(v_new)
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], kq_, slot, 1)
+        cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], vq_, slot, 1)
+        cache["k_scale"] = lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, 1)
+        cache["v_scale"] = lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, 1)
+        k_all = dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+        v_all = dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        slot = pos if window is None else pos % _ring_len(window, s_max)
+        cache = dict(cache)
+        cache["k"] = lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, 1)
+        cache["v"] = lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, 1)
+        k_all, v_all = cache["k"], cache["v"]
+
+    rep = hl // kv_store
+    kr = jnp.repeat(k_all, rep, axis=2)
+    vr = jnp.repeat(v_all, rep, axis=2)
+    # preferred_element_type accumulates in f32 WITHOUT materializing an
+    # f32 copy of the whole cache (2x the cache in HBM temp otherwise)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, kr.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    logits = softcap(logits, a.softcap)
+    s_len = k_all.shape[1]
+    span = jnp.arange(s_len)
+    if window is None:
+        valid = span <= pos
+    else:
+        ring = _ring_len(window, s_max)
+        age = (pos % ring) - span  # ring-buffer distance
+        age = jnp.where(age < 0, age + ring, age)
+        valid = (age < window) & (span < jnp.minimum(pos + 1, ring))
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", probs.astype(vr.dtype), vr)
+    o = o.reshape(b, 1, hl * hd)
+    out = local_linear(o, p["wo"])
+    if plan.tp > 1 and plan.attn_sharded:
+        out = psum_if(out, plan)
+    return out, cache
+
+
+def _ring_len(window: int, s_max: int) -> int:
+    """Sliding-window layers keep a ring buffer of window (+1 slot)."""
+    return min(s_max, window + 1)
+
+
+def use_seq_cache(cfg: ModelConfig, plan: ShardingPlan,
+                  window) -> bool:
+    """Seq-shard the cache when heads can't shard and the layer is
+    global-attention (window ring buffers stay replicated — small)."""
+    return (plan.seq_cache and plan.tp > 1 and not plan.attn_sharded
+            and window is None)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def gqa_cache_shape(cfg: ModelConfig, plan: ShardingPlan, batch: int,
+                    s_max: int, layer_idx: int, kv_dtype: str):
+    a = cfg.attention
+    kv_store = stored_kv_heads(cfg, plan)
+    window = a.layer_window(layer_idx)
+    s = s_max if window is None else _ring_len(window, s_max)
+    if use_seq_cache(cfg, plan, window):
+        s = _pad_to(s_max, plan.tp)
+        if not plan.global_shapes:
+            s //= plan.tp  # per-device sequence chunk
+    dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    shapes = {
+        "k": ((batch, s, kv_store, a.head_dim), dt),
+        "v": ((batch, s, kv_store, a.head_dim), dt),
+    }
+    if kv_dtype == "int8":
+        shapes["k_scale"] = ((batch, s, kv_store, 1), jnp.float32)
+        shapes["v_scale"] = ((batch, s, kv_store, 1), jnp.float32)
+    return shapes
+
+
+def _seq_sharded_decode_attention(q, k_all, v_all, pos, plan: ShardingPlan,
+                                  hd: int, cap):
+    """Flash-decode over the sequence-sharded cache: local partial
+    attention + log-sum-exp merge over the tp axis (the softmax analogue
+    of Domino's group-sum merge).  q: (B,1,H,hd); k/v: (B,chunk,KV,hd)
+    local chunks.  Returns (B,1,H,hd) fully merged (replicated)."""
+    b, _, hl, _ = q.shape
+    kv_store = k_all.shape[2]
+    rep = hl // kv_store
+    i = plan.tp_index()
+    chunk = k_all.shape[1]
+    kr = jnp.repeat(k_all, rep, axis=2)
+    vr = jnp.repeat(v_all, rep, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, kr.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    logits = softcap(logits, cap)
+    span = i * chunk + jnp.arange(chunk)
+    valid = span <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    m_local = jnp.max(logits, axis=-1, keepdims=True)
+    m_local = jnp.where(jnp.isfinite(m_local), m_local, -1e30)
+    p = jnp.where(valid[None, None, None, :],
+                  jnp.exp(logits - m_local), 0.0)
+    num = jnp.einsum("bhqs,bshd->bqhd", p.astype(vr.dtype), vr
+                     ).astype(jnp.float32)
+    den = jnp.sum(p, axis=-1)  # (B,H,1)
+    m_global = lax.pmax(m_local, plan.tp_axis)
+    corr = jnp.exp(m_local - m_global)  # (B,H,1,1)
+    num = lax.psum(num * corr[:, :, 0, :, None].transpose(0, 2, 1, 3),
+                   plan.tp_axis)
+    den = lax.psum(den * corr[..., 0], plan.tp_axis)  # (B,H,1)
+    out = num / jnp.maximum(den.transpose(0, 2, 1)[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, plan: ShardingPlan, dtype):
+    a = cfg.attention
+    d = cfg.d_model
+    hl = plan.heads_local(cfg)
+    dn, dr = a.head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or dn
+    dc = a.kv_lora_rank
+    ql = a.q_lora_rank or d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], d, (d, ql), dtype),
+        "q_norm": jnp.zeros((ql,), dtype),
+        "w_uq": dense_init(ks[1], ql, (ql, hl * (dn + dr)), dtype),
+        "w_dkv": dense_init(ks[2], d, (d, dc + dr), dtype),
+        "kv_norm": jnp.zeros((dc,), dtype),
+        "w_uk": dense_init(ks[3], dc, (dc, hl * dn), dtype),
+        "w_uv": dense_init(ks[4], dc, (dc, hl * dv), dtype),
+        "wo": dense_init(ks[5], hl * dv, (hl * dv, d), dtype),
+    }
+
+
+def mla_forward(p, x, cfg: ModelConfig, layer_idx: int, plan: ShardingPlan,
+                positions, want_cache: bool = False,
+                kv_dtype: str = "bfloat16"):
+    a = cfg.attention
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    dn, dr = a.head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or dn
+
+    # low-rank q: the down-projection is small and computed redundantly
+    cq = up(x, p["w_dq"], plan) if plan.tp > 1 else local_linear(x, p["w_dq"])
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = local_linear(cq, p["w_uq"]).reshape(b, -1, hl, dn + dr)
+
+    ckv = up(x, p["w_dkv"], plan) if plan.tp > 1 else local_linear(x, p["w_dkv"])
+    c, k_rope = ckv[..., : a.kv_lora_rank], ckv[..., a.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+
+    s = q.shape[1]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, a.rope_theta)
+    k_rope_h = rope(k_rope[:, :, None, :], positions, a.rope_theta)
+
+    k_nope = local_linear(c, p["w_uk"]).reshape(b, s, hl, dn)
+    v = local_linear(c, p["w_uv"]).reshape(b, s, hl, dv)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_h, (b, s, hl, dr))], axis=-1)
+
+    o = flash_attention(q_full, k_full, v, causal=True)
+    o = o.reshape(b, s, hl * dv)
+    out = down(o, p["wo"], plan) if plan.tp > 1 else local_linear(o, p["wo"])
+
+    cache = None
+    if want_cache:
+        payload = jnp.concatenate([c, k_rope_h[:, :, 0, :]], axis=-1)
+        if kv_dtype == "int8":
+            cq_, cs = quantize_kv(payload)
+            cache = {"c": cq_, "c_scale": cs}
+        else:
+            cache = {"c": payload}
+    return out, cache
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, layer_idx: int,
+               plan: ShardingPlan, kv_dtype: str = "bfloat16"):
+    """Absorbed-matmul MLA decode: logits = (q_nope @ w_ukT) c^T + q_rope
+    k_rope^T; out = (probs @ c) @ w_uv.  Cache holds only (c ‖ k_rope)."""
+    a = cfg.attention
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    dn, dr = a.head_dim, a.qk_rope_head_dim
+    dv = a.v_head_dim or dn
+    dc = a.kv_lora_rank
+
+    cq = local_linear(x, p["w_dq"])
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = local_linear(cq, p["w_uq"]).reshape(b, hl, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_rope = rope(q_rope[:, None], posv, a.rope_theta)[:, 0]
+
+    ckv = local_linear(x, p["w_dkv"])[:, 0]  # (B, dc+dr)
+    c_new = rms_norm(ckv[..., :dc], p["kv_norm"], cfg.norm_eps)
+    kr_new = rope(ckv[..., dc:].reshape(b, 1, 1, dr), posv,
+                  a.rope_theta)[:, 0, 0]
+    payload = jnp.concatenate([c_new, kr_new], axis=-1)[:, None, :]
+
+    cache = dict(cache)
+    if kv_dtype == "int8":
+        pq, ps = quantize_kv(payload)
+        cache["c"] = lax.dynamic_update_slice_in_dim(cache["c"], pq, pos, 1)
+        cache["c_scale"] = lax.dynamic_update_slice_in_dim(
+            cache["c_scale"], ps, pos, 1)
+        stored = dequantize_kv(cache["c"], cache["c_scale"], x.dtype)
+    else:
+        cache["c"] = lax.dynamic_update_slice_in_dim(cache["c"], payload, pos, 1)
+        stored = cache["c"]
+    c_all, kr_all = stored[..., :dc], stored[..., dc:]
+
+    # absorb w_uk into q; accumulate in f32 via preferred_element_type so
+    # the (B, S, dc) latent cache is never copied to f32 in HBM
+    from repro.models.common import resolve_w
+    w_uk = resolve_w(p["w_uk"], x).reshape(dc, hl, dn)
+    q_abs = jnp.einsum("bhn,chn->bhc", q_nope, w_uk.astype(q_nope.dtype),
+                       preferred_element_type=jnp.float32)
+    logits = jnp.einsum("bhc,bsc->bhs", q_abs.astype(x.dtype), c_all,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bhr,bsr->bhs", q_rope, kr_all.astype(q_rope.dtype),
+                         preferred_element_type=jnp.float32)
+    logits *= (dn + dr) ** -0.5
+    valid = jnp.arange(c_all.shape[1]) <= pos
+    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsc->bhc", probs.astype(x.dtype), c_all,
+                     preferred_element_type=jnp.float32)
+    w_uv = resolve_w(p["w_uv"], x).reshape(dc, hl, dv)
+    o = jnp.einsum("bhc,chv->bhv", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, hl * dv).astype(x.dtype)
+    out = local_linear(o, p["wo"])
+    if plan.tp > 1:
+        out = psum_if(out, plan)
+    return out, cache
+
+
+def mla_cache_shape(cfg: ModelConfig, plan: ShardingPlan, batch: int,
+                    s_max: int, kv_dtype: str):
+    a = cfg.attention
+    width = a.kv_lora_rank + a.qk_rope_head_dim
+    dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    shapes = {"c": ((batch, s_max, width), dt)}
+    if kv_dtype == "int8":
+        shapes["c_scale"] = ((batch, s_max, 1), jnp.float32)
+    return shapes

@@ -1,0 +1,350 @@
+"""Model foundations: sharding plan, norms, RoPE, flash attention,
+vocab-sharded embedding / loss — all written as *per-device* functions that
+run inside one ``jax.shard_map`` (manual SPMD).  With ``plan.tp == 1``
+every collective degenerates to local math, which is how the CPU smoke
+tests run them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import dataflow
+
+# ---------------------------------------------------------------------------
+# Sharding plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """Static parallel layout decisions for one (arch, mesh) pair."""
+
+    tp: int = 1                      # model-axis size
+    tp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ()    # data axes (for loss pmean)
+    reduction: str = "ring"          # "ring" (Domino) | "allreduce" (baseline)
+    attn_sharded: bool = True        # shard query heads over tp?
+    kv_sharded: bool = True          # kv heads divisible by tp?
+    experts_pad: int = 0             # experts padded to multiple of tp
+    seq_shard: bool = True           # residual stream seq-sharded over tp
+    # shard full-attention KV caches over their *sequence* dim on the tp
+    # axis when heads can't shard (H % tp != 0), merging partial softmax
+    # stats with log-sum-exp — Domino's group-sum merge for attention.
+    seq_cache: bool = False
+    # when True, init functions produce *global* (unsharded) shapes — used
+    # with jit(out_shardings=...) to materialize sharded global params;
+    # per-device shapes come from the same plan with global_shapes=False,
+    # and PartitionSpecs are derived automatically from the shape ratio.
+    global_shapes: bool = False
+
+    def as_global(self) -> "ShardingPlan":
+        return replace(self, global_shapes=True)
+
+    @staticmethod
+    def for_model(cfg: ModelConfig, tp: int, dp_axes: Tuple[str, ...] = (),
+                  reduction: str = "ring") -> "ShardingPlan":
+        a = cfg.attention
+        attn_sharded = a is not None and a.num_heads % tp == 0
+        kv_sharded = attn_sharded and a.num_kv_heads % tp == 0
+        pad = 0
+        if cfg.moe is not None:
+            pad = (-cfg.moe.num_experts) % tp
+        return ShardingPlan(
+            tp=tp, dp_axes=dp_axes, reduction=reduction,
+            attn_sharded=attn_sharded, kv_sharded=kv_sharded,
+            experts_pad=pad,
+        )
+
+    # -- local shard sizes ---------------------------------------------------
+
+    def heads_local(self, cfg: ModelConfig) -> int:
+        h = cfg.attention.num_heads
+        if self.global_shapes:
+            return h
+        return h // self.tp if self.attn_sharded else h
+
+    def kv_local(self, cfg: ModelConfig) -> int:
+        kv = cfg.attention.num_kv_heads
+        if self.global_shapes:
+            return kv
+        return kv // self.tp if self.kv_sharded else kv
+
+    def shard(self, n: int) -> int:
+        if self.global_shapes:
+            return n
+        assert n % self.tp == 0, (n, self.tp)
+        return n // self.tp
+
+    def tp_index(self):
+        if self.tp == 1:
+            return 0
+        return lax.axis_index(self.tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# Weight residency wrappers
+# ---------------------------------------------------------------------------
+
+
+class Zero3(object):
+    """ZeRO-3 / FSDP leaf: the weight shard lives split over the data axes
+    on ``dim``; ``resolve_w`` all-gathers it at first use *inside* the
+    layer scan body, so only one cycle's weights are materialized at a
+    time (671B params / 256 chips would otherwise need 84 GB/device)."""
+
+    def __init__(self, shard, dim: int, axes):
+        self.shard = shard
+        self.dim = dim
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.shard,), (self.dim, self.axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+
+jax.tree_util.register_pytree_node(
+    Zero3, lambda z: z.tree_flatten(),
+    lambda aux, ch: Zero3.tree_unflatten(aux, ch))
+
+
+def resolve_w(w, like=None):
+    """Weights may arrive as {"q": int8, "s": scale} (CIM-resident serving
+    mode) or as :class:`Zero3` shards.  Dequantize / gather on use — HBM
+    residency stays 8-bit / scattered; XLA fuses or frees after use."""
+    if isinstance(w, Zero3):
+        inner = w.shard
+        gathered = lax.all_gather(inner, w.axes, axis=w.dim, tiled=True)
+        return resolve_w(gathered, like)
+    if isinstance(w, dict) and "q" in w:
+        dtype = like.dtype if like is not None else jnp.bfloat16
+        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Plan-aware linear dispatchers (Domino ring vs baselines vs tp=1)
+# ---------------------------------------------------------------------------
+
+
+def up(x, w, plan: ShardingPlan, tail=None):
+    w = resolve_w(w, x)
+    """Seq-sharded in -> (full-seq, local-features) out."""
+    if plan.tp == 1 or not plan.seq_shard:
+        y = jnp.einsum("...sk,kn->...sn", x, w,
+                       preferred_element_type=jnp.float32)
+        y = tail(y) if tail is not None else y
+        return y.astype(x.dtype)
+    return dataflow.up_matmul(x, w, axis=plan.tp_axis,
+                              reduction=plan.reduction, tail=tail)
+
+
+def down(x, w, plan: ShardingPlan, tail=None):
+    """(full-seq, local-features) in -> seq-sharded, fully-reduced out."""
+    w = resolve_w(w, x)
+    if plan.tp == 1 or not plan.seq_shard:
+        y = jnp.einsum("...sk,kn->...sn", x, w,
+                       preferred_element_type=jnp.float32)
+        y = tail(y) if tail is not None else y
+        return y.astype(x.dtype)
+    return dataflow.down_matmul(x, w, axis=plan.tp_axis,
+                                reduction=plan.reduction, tail=tail)
+
+
+def local_linear(x, w, bias=None, tail=None):
+    w = resolve_w(w, x)
+    y = jnp.einsum("...sk,kn->...sn", x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias
+    if tail is not None:
+        y = tail(y)
+    return y.astype(x.dtype)
+
+
+def psum_if(x, plan: ShardingPlan):
+    if plan.tp == 1:
+        return x
+    return lax.psum(x, plan.tp_axis)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "relu2": lambda v: jnp.square(jax.nn.relu(v)),
+    "relu": jax.nn.relu,
+}
+
+
+def gated_act(name: str) -> bool:
+    return name in ("silu", "gelu")
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, D) with D even; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    assert d % 2 == 0
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, d, 2, dtype=jnp.float32) / d
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    if ang.ndim == 2:  # (S, D/2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure JAX, scan-over-query-blocks, window-sliced KV)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    block_q: int = 512, q_offset: int = 0):
+    """q: (B, S, H, Dh); k/v: (B, S_kv, KV, Dh) with H a multiple of KV.
+    Sliding-window layers slice only ``window + block_q`` keys per query
+    block (memory AND flops proportional to the window); global layers
+    scan all keys with a causal mask.  Differentiable (scan-based).
+    ``q_offset``: absolute position of q[0] (for cross-chunk prefill)."""
+    b, s, h, dh = q.shape
+    s_kv, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = dh ** -0.5
+    block_q = min(block_q, s)
+    n_blocks = math.ceil(s / block_q)
+    pad = n_blocks * block_q - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, n_blocks, block_q, h, dh)
+
+    kr = jnp.repeat(k, rep, axis=2)  # (B, S_kv, H, Dh)
+    vr = jnp.repeat(v, rep, axis=2)
+
+    kv_span = s_kv if window is None else min(s_kv, window + block_q)
+
+    def one_block(idx_and_q):
+        idx, qblk = idx_and_q  # qblk: (B, block_q, H, Dh)
+        q_start = idx * block_q + q_offset
+        if window is None:
+            k_blk, v_blk, k_start = kr, vr, 0
+        else:
+            k_start = jnp.clip(q_start - window, 0, max(0, s_kv - kv_span))
+            k_blk = lax.dynamic_slice_in_dim(kr, k_start, kv_span, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(vr, k_start, kv_span, axis=1)
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", qblk, k_blk, preferred_element_type=jnp.float32
+        ) * scale
+        logits = softcap(logits, logit_softcap)
+        q_pos = q_start + jnp.arange(block_q)
+        k_pos = k_start + jnp.arange(k_blk.shape[1])
+        mask = jnp.ones((block_q, k_blk.shape[1]), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v_blk.dtype), v_blk)
+        return out
+
+    idxs = jnp.arange(n_blocks)
+    outs = lax.map(one_block, (idxs, jnp.moveaxis(qb, 1, 0)))  # (n, B, bq, H, Dv)
+    dv = v.shape[-1]  # MLA: v head dim can differ from the qk head dim
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_blocks * block_q, h, dv)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded embedding / head / cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table_local, ids, plan: ShardingPlan):
+    """table_local: (V_local, D) — this device's vocab shard; ids: (B, S).
+    Masked local gather + psum over tp (gather-then-merge, no one-hot)."""
+    v_local = table_local.shape[0]
+    lo = plan.tp_index() * v_local
+    local_ids = jnp.clip(ids - lo, 0, v_local - 1)
+    hit = (ids >= lo) & (ids < lo + v_local)
+    emb = jnp.take(table_local, local_ids, axis=0)
+    emb = jnp.where(hit[..., None], emb, 0.0)
+    return psum_if(emb, plan)
+
+
+def sharded_softmax_xent(logits_local, labels, plan: ShardingPlan,
+                         valid=None):
+    """Cross-entropy with vocab-sharded logits: (B, S, V_local) against
+    global label ids.  logsumexp and the label hit are merged over tp —
+    no full logits array ever exists (Domino-style locality for the
+    biggest tensor in LM training)."""
+    v_local = logits_local.shape[-1]
+    lo = plan.tp_index() * v_local
+    x = logits_local.astype(jnp.float32)
+    # the max shift is mathematically gradient-free (and pmax has no JVP
+    # rule) — stop the gradient *before* the collective
+    m_local = lax.stop_gradient(jnp.max(x, axis=-1))
+    m = m_local if plan.tp == 1 else lax.pmax(m_local, plan.tp_axis)
+    sumexp = jnp.sum(jnp.exp(x - m[..., None]), axis=-1)
+    sumexp = psum_if(sumexp, plan)
+    lse = m + jnp.log(sumexp)
+
+    local_labels = jnp.clip(labels - lo, 0, v_local - 1)
+    hit = (labels >= lo) & (labels < lo + v_local)
+    picked = jnp.take_along_axis(x, local_labels[..., None], axis=-1)[..., 0]
+    picked = jnp.where(hit, picked, 0.0)
+    picked = psum_if(picked, plan)
+
+    nll = lse - picked  # (B, S)
+    if valid is None:
+        valid = jnp.ones_like(nll)
+    else:
+        valid = valid.astype(jnp.float32)
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    if plan.dp_axes:
+        loss = lax.pmean(loss, plan.dp_axes)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, fan_in, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,298 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+The speech frontend is a STUB per spec: ``input_specs()`` delivers
+precomputed w2v-BERT frame embeddings (B, T, 1024); the model owns the
+projection, the 24-layer bidirectional encoder, and the 24-layer decoder
+with causal self-attention + cross-attention.
+
+Domino mapping: encoder output (the "memory") is computed once and then
+stays resident — decoder cross-attention K/V are projected once at
+prefill and cached, the exact weight-stationary discipline the paper
+applies to CIM arrays.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    ShardingPlan,
+    dense_init,
+    down,
+    embed_lookup,
+    flash_attention,
+    local_linear,
+    psum_if,
+    rms_norm,
+    up,
+)
+from repro.models import transformer as tfm
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(key, cfg: ModelConfig, plan: ShardingPlan, dtype):
+    return attn_mod.init_gqa(key, cfg, plan, dtype)
+
+
+def cross_attn_forward(p, x, memory, cfg: ModelConfig, plan: ShardingPlan,
+                       want_cache=False):
+    """x: (B, S_local, D) decoder stream; memory: (B, T, D) gathered
+    encoder output.  No positions (cross-attention carries none)."""
+    a = cfg.attention
+    hd = a.head_dim
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    kv_store = attn_mod.stored_kv_heads(cfg, plan)
+
+    if plan.tp > 1:
+        q = up(x, p["wq"], plan)
+    else:
+        q = local_linear(x, p["wq"])
+    k = local_linear(memory, p["wk"])
+    v = local_linear(memory, p["wv"])
+    if plan.attn_sharded and not plan.kv_sharded and plan.tp > 1:
+        k = attn_mod._group_slice(k, cfg, plan, hd)
+        v = attn_mod._group_slice(v, cfg, plan, hd)
+    s = q.shape[1]
+    t = memory.shape[1]
+    q = q.reshape(b, s, hl, hd)
+    k = k.reshape(b, t, kv_store, hd)
+    v = v.reshape(b, t, kv_store, hd)
+    o = flash_attention(q, k, v, causal=False)
+    o = o.reshape(b, s, hl * hd)
+    out = down(o, p["wo"], plan) if plan.tp > 1 else local_linear(o, p["wo"])
+    cache = {"k": k, "v": v} if want_cache else None
+    return out, cache
+
+
+def cross_attn_decode(p, x, cache, cfg: ModelConfig, plan: ShardingPlan):
+    a = cfg.attention
+    hd = a.head_dim
+    b = x.shape[0]
+    hl = plan.heads_local(cfg)
+    kv_store = cache["k"].shape[2]
+    q = local_linear(x, p["wq"]).reshape(b, 1, hl, hd)
+    rep = hl // kv_store
+    kr = jnp.repeat(cache["k"], rep, axis=2)
+    vr = jnp.repeat(cache["v"], rep, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * hd ** -0.5
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", probs.astype(vr.dtype), vr)
+    out = local_linear(o.reshape(b, 1, hl * hd), p["wo"])
+    if plan.tp > 1 and plan.attn_sharded:
+        out = psum_if(out, plan)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, plan: ShardingPlan, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    v_local = tfm.vocab_local(cfg, plan)
+    spec = tfm.layer_spec(cfg, 0)
+
+    def enc_layer(k):
+        return tfm.init_layer(k, spec, cfg, plan, dtype)
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p = tfm.init_layer(k1, spec, cfg, plan, dtype)
+        p["cross"] = init_cross_attn(k2, cfg, plan, dtype)
+        p["norm_cross"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (v_local, cfg.d_model)
+                                   ).astype(dtype) * 0.02,
+        "frontend_proj": dense_init(
+            ks[1], cfg.frontend.embed_dim,
+            (cfg.frontend.embed_dim, cfg.d_model), dtype),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec_norm": jnp.zeros((cfg.d_model,), dtype),
+        "encoder": jax.vmap(enc_layer)(
+            jax.random.split(ks[2], cfg.encoder_layers)),
+        "decoder": jax.vmap(dec_layer)(
+            jax.random.split(ks[3], cfg.num_layers)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[4], cfg.d_model,
+                                    (cfg.d_model, v_local), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder stacks
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames, cfg: ModelConfig, plan: ShardingPlan,
+           remat: str = "full"):
+    """frames: (B, T, frontend_dim) -> gathered memory (B, T, D)."""
+    x = local_linear(frames, params["frontend_proj"])
+    if plan.tp > 1 and plan.seq_shard:
+        chunk = x.shape[1] // plan.tp
+        x = lax.dynamic_slice_in_dim(x, plan.tp_index() * chunk, chunk, axis=1)
+    t = frames.shape[1]
+    positions = jnp.arange(t)
+    spec = tfm.layer_spec(cfg, 0)
+    policy = tfm._remat_policy(remat)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        o, _ = attn_mod.gqa_forward(lp["attn"], h, cfg, 0, plan, positions,
+                                    causal=False)
+        x = x + o
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + tfm.mlp_forward(lp["mlp"], h, cfg, plan)
+        return x, None
+
+    wrapped = body if policy is None else jax.checkpoint(
+        body, policy=policy, prevent_cse=False)
+    x, _ = lax.scan(lambda c, lp: wrapped(c, lp), x, params["encoder"])
+    x = rms_norm(x, params["enc_norm"], cfg.norm_eps)
+    if plan.tp > 1 and plan.seq_shard:
+        x = lax.all_gather(x, plan.tp_axis, axis=1, tiled=True)
+    return x
+
+
+def _decoder_stack(params, x, memory, cfg, plan, positions, *,
+                   want_caches=False, kv_dtype="bfloat16", remat="full"):
+    policy = tfm._remat_policy(remat)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        o, self_c = attn_mod.gqa_forward(
+            lp["attn"], h, cfg, 0, plan, positions,
+            want_cache=want_caches, kv_dtype=kv_dtype)
+        x = x + o
+        h = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        o, cross_c = cross_attn_forward(lp["cross"], h, memory, cfg, plan,
+                                        want_cache=want_caches)
+        x = x + o
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + tfm.mlp_forward(lp["mlp"], h, cfg, plan)
+        return x, (self_c, cross_c)
+
+    wrapped = body if policy is None else jax.checkpoint(
+        body, policy=policy, prevent_cse=False)
+    x, caches = lax.scan(lambda c, lp: wrapped(c, lp), x, params["decoder"])
+    x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, plan: ShardingPlan,
+                remat: str = "full", xent_chunk: int = 1024):
+    """batch: {frames (B,T,e), tokens (B,S), labels (B,S)}."""
+    memory = encode(params, batch["frames"], cfg, plan, remat=remat)
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_lookup(params["embed"], tokens, plan)
+    if plan.tp > 1 and plan.seq_shard:
+        chunk = x.shape[1] // plan.tp
+        x = lax.dynamic_slice_in_dim(x, plan.tp_index() * chunk, chunk, axis=1)
+    positions = jnp.arange(tokens.shape[1])
+    h, _ = _decoder_stack(params, x, memory, cfg, plan, positions,
+                          remat=remat)
+    if plan.tp > 1 and plan.seq_shard:
+        h = lax.all_gather(h, plan.tp_axis, axis=1, tiled=True)
+    w = tfm._head_weight(params, cfg)
+    loss = tfm._chunked_xent(h, labels, w, cfg, plan, xent_chunk)
+    if plan.dp_axes:
+        loss = lax.pmean(loss, plan.dp_axes)
+    return loss
+
+
+def prefill(params, batch, cfg: ModelConfig, plan: ShardingPlan,
+            kv_dtype="bfloat16", s_max=None):
+    memory = encode(params, batch["frames"], cfg, plan, remat="none")
+    tokens = batch["tokens"]
+    x = embed_lookup(params["embed"], tokens, plan)
+    if plan.tp > 1 and plan.seq_shard:
+        chunk = x.shape[1] // plan.tp
+        x = lax.dynamic_slice_in_dim(x, plan.tp_index() * chunk, chunk, axis=1)
+    positions = jnp.arange(tokens.shape[1])
+    h, caches = _decoder_stack(params, x, memory, cfg, plan, positions,
+                               want_caches=True, kv_dtype=kv_dtype,
+                               remat="none")
+    if s_max is not None and s_max != tokens.shape[1]:
+        self_c, cross_c = caches
+        s = tokens.shape[1]
+        self_c = jax.tree.map(
+            lambda a: tfm._to_ring(a, a.ndim - 3, s, s_max)
+            if a.ndim >= 3 else a, self_c)
+        caches = (self_c, cross_c)
+    last = h[:, -1]
+    if plan.tp > 1 and plan.seq_shard:
+        i = plan.tp_index()
+        last = psum_if(jnp.where(i == plan.tp - 1, last, 0.0), plan)
+    logits_local = tfm.lm_logits_local(params, last[:, None], cfg, plan)[:, 0]
+    if plan.tp > 1:
+        logits = lax.all_gather(logits_local, plan.tp_axis, axis=1, tiled=True)
+    else:
+        logits = logits_local
+    return logits, caches
+
+
+def init_cache(cfg: ModelConfig, plan: ShardingPlan, batch: int, s_max: int,
+               t_enc: int, kv_dtype="bfloat16"):
+    """Zero (self, cross) caches matching prefill's output structure."""
+    a = cfg.attention
+    kv_store = attn_mod.stored_kv_heads(cfg, plan)
+    ldim = (cfg.num_layers,)
+    dt = jnp.int8 if kv_dtype == "int8" else jnp.bfloat16
+    self_c = {
+        "k": jnp.zeros(ldim + (batch, s_max, kv_store, a.head_dim), dt),
+        "v": jnp.zeros(ldim + (batch, s_max, kv_store, a.head_dim), dt),
+    }
+    if kv_dtype == "int8":
+        self_c["k_scale"] = jnp.zeros(ldim + (batch, s_max, kv_store, 1),
+                                      jnp.float32)
+        self_c["v_scale"] = jnp.zeros(ldim + (batch, s_max, kv_store, 1),
+                                      jnp.float32)
+    cross_c = {
+        "k": jnp.zeros(ldim + (batch, t_enc, kv_store, a.head_dim),
+                       jnp.bfloat16),
+        "v": jnp.zeros(ldim + (batch, t_enc, kv_store, a.head_dim),
+                       jnp.bfloat16),
+    }
+    return (self_c, cross_c)
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                plan: ShardingPlan, kv_dtype="bfloat16"):
+    self_c, cross_c = caches
+    x = embed_lookup(params["embed"], token[:, None], plan)
+
+    def body(x, pc):
+        lp, sc, cc = pc
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        o, sc = attn_mod.gqa_decode(lp["attn"], h, sc, pos, cfg, 0, plan,
+                                    kv_dtype=kv_dtype)
+        x = x + o
+        h = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        x = x + cross_attn_decode(lp["cross"], h, cc, cfg, plan)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + tfm.mlp_forward(lp["mlp"], h, cfg, plan)
+        return x, sc
+
+    x, new_self = lax.scan(body, x, (params["decoder"], self_c, cross_c))
+    x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+    logits_local = tfm.lm_logits_local(params, x, cfg, plan)[:, 0]
+    if plan.tp > 1:
+        logits = lax.all_gather(logits_local, plan.tp_axis, axis=1, tiled=True)
+    else:
+        logits = logits_local
+    return logits, (new_self, cross_c)

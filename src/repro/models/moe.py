@@ -1,0 +1,163 @@
+"""Expert-parallel Mixture-of-Experts (jamba 16e/top-2, granite 40e/top-8,
+deepseek-v3 256e/top-8 + shared expert).
+
+Experts are sharded across the ``model`` axis (the paper's Eqn.-2 FC
+partitioning applied at expert granularity); tokens are already sharded
+on the same axis (sequence-parallel stream), so dispatch is one
+``all_to_all`` each way — the Domino view: tokens travel to the tiles
+that hold their weights, compute happens where the memory is, and
+combine-weights ride back with the results.
+
+Capacity-based dispatch (sort -> capacity-sliced gather), standard
+Switch-style token dropping when a device overflows.  Padded experts
+(granite: 40 -> 48 on tp=16) are masked to -inf in the router.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    ACT,
+    ShardingPlan,
+    dense_init,
+    gated_act,
+    resolve_w,
+)
+
+
+def init_moe(key, cfg: ModelConfig, plan: ShardingPlan, dtype):
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    e_total = m.num_experts + plan.experts_pad
+    e_local = plan.shard(e_total)
+    ks = jax.random.split(key, 5)
+    n_mats = 3 if gated_act(cfg.activation) else 2
+    p = {
+        "router": dense_init(ks[0], d, (d, m.num_experts), jnp.float32),
+        "w_in": dense_init(ks[1], d, (e_local, d, f), dtype),
+        "w_out": dense_init(ks[2], f, (e_local, f, d), dtype),
+    }
+    if n_mats == 3:
+        p["w_gate"] = dense_init(ks[3], d, (e_local, d, f), dtype)
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        p["shared_in"] = dense_init(ks[4], d, (d, fs), dtype)
+        p["shared_out"] = dense_init(ks[4], fs, (fs, d), dtype)
+        if n_mats == 3:
+            p["shared_gate"] = dense_init(ks[3], d, (d, fs), dtype)
+    return p
+
+
+def moe_forward(p, x, cfg: ModelConfig, plan: ShardingPlan
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S_local, D) -> (same shape, aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e_total = m.num_experts + plan.experts_pad
+    e_local = e_total // max(plan.tp, 1)
+    act = ACT[cfg.activation]
+
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E_real)
+    if plan.experts_pad:
+        logits = jnp.pad(logits, ((0, 0), (0, plan.experts_pad)),
+                         constant_values=-1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = lax.top_k(probs, m.top_k)  # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce_frac = jnp.zeros((e_total,)).at[gate_e.reshape(-1)].add(1.0) / (t * m.top_k)
+    aux = m.num_experts * jnp.sum(me * ce_frac) * m.aux_loss_coef
+
+    # ---- dispatch: sort (token,k) pairs by expert, capacity-slice ----
+    cap = int(math.ceil(t * m.top_k / e_total * m.capacity_factor))
+    cap = max(cap, 1)
+    flat_e = gate_e.reshape(-1)            # (T*K,)
+    flat_tok = jnp.arange(t * m.top_k) // m.top_k
+    order = jnp.argsort(flat_e)            # stable
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    # position of each entry within its expert group
+    pos_in_e = jnp.arange(t * m.top_k) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    keep = pos_in_e < cap
+    # slot table: (E_total, cap) of token indices (t = drop sentinel).
+    # overflow entries scatter to an out-of-bounds index -> dropped (JAX
+    # scatter default), i.e. Switch-style token dropping.
+    slot_tok = jnp.full((e_total * cap,), t, jnp.int32)
+    slot_idx = sorted_e * cap + pos_in_e
+    oob = e_total * cap
+    slot_tok = slot_tok.at[jnp.where(keep, slot_idx, oob)].set(
+        sorted_tok.astype(jnp.int32), mode="drop")
+    slot_tok = slot_tok.reshape(e_total, cap)
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    dispatched = jnp.take(xt_pad, slot_tok, axis=0)  # (E_total, cap, D)
+
+    if plan.tp > 1:
+        # tokens -> the devices owning their experts.  Tiled all_to_all is
+        # rank-preserving and cleanly transposable: (E_total, cap, D)
+        # -> (e_local, tp*cap, D), receiver keeps its expert block with
+        # sender-major rows.
+        dispatched = lax.all_to_all(
+            dispatched, plan.tp_axis, split_axis=0, concat_axis=1,
+            tiled=True,
+        )
+    else:
+        dispatched = dispatched.reshape(e_local, cap, d)
+
+    # ---- expert FFN (batched over local experts) ----
+    # NOTE: einsums stay in the ambient dtype — an f32 preferred_element_
+    # type here would send f32 cotangents into all_to_all's transpose,
+    # whose primal is bf16 (dtype-mismatch error under grad).
+    h = jnp.einsum("ecd,edf->ecf", dispatched, resolve_w(p["w_in"], x))
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", dispatched, resolve_w(p["w_gate"], x))
+        h = (act(g.astype(jnp.float32))
+             * h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = act(h.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, resolve_w(p["w_out"], x))
+
+    if plan.tp > 1:
+        # (e_local, tp*cap, D) -> (E_total, cap, D): results return to
+        # their senders, expert-major (sender j's block = its experts).
+        y = lax.all_to_all(
+            y, plan.tp_axis, split_axis=1, concat_axis=0, tiled=True,
+        )
+    else:
+        y = y.reshape(e_total, cap, d)
+
+    # ---- combine: scatter-add expert outputs * gate weights ----
+    flat_w = gate_w.reshape(-1)[order]
+    contrib = y.reshape(e_total * cap, d)
+    src_rows = jnp.take(contrib, jnp.where(keep, slot_idx, oob), axis=0,
+                        mode="fill", fill_value=0)
+    out = jnp.zeros((t + 1, d), jnp.float32)
+    out = out.at[jnp.where(keep, sorted_tok, t)].add(
+        src_rows.astype(jnp.float32) * jnp.where(keep, flat_w, 0.0)[:, None])
+    out = out[:t].astype(x.dtype)
+
+    # ---- shared experts (dense, always-on) ----
+    if "shared_in" in p:
+        hs = jnp.einsum("td,df->tf", xt, resolve_w(p["shared_in"], x),
+                        preferred_element_type=jnp.float32)
+        if "shared_gate" in p:
+            gs = jnp.einsum("td,df->tf", xt, resolve_w(p["shared_gate"], x),
+                            preferred_element_type=jnp.float32)
+            hs = act(gs) * hs
+        else:
+            hs = act(hs)
+        out = out + jnp.einsum("tf,fd->td", hs.astype(x.dtype),
+                               resolve_w(p["shared_out"], x),
+                               preferred_element_type=jnp.float32).astype(x.dtype)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,156 @@
+"""Mamba-1 selective-SSM block (falcon-mamba, jamba's mamba layers).
+
+Channel (d_inner) sharding over the model axis: the conv + scan are
+embarrassingly parallel across channels; only the (tiny) x_proj that
+produces dt/B/C needs a psum — a Domino-style partial-sum of a
+(dt_rank + 2*d_state)-wide vector.  in/out projections ride the ring.
+
+Train/prefill uses an associative scan (O(log S) depth, differentiable);
+decode is the O(1) recurrent step on carried (conv, ssm) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ShardingPlan, dense_init, down, local_linear, up
+
+import math
+
+
+def _dims(cfg: ModelConfig, plan: ShardingPlan):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    assert d_in % plan.tp == 0, (d_in, plan.tp)
+    return s, d_in, plan.shard(d_in), s.resolved_dt_rank(cfg.d_model)
+
+
+def init_mamba(key, cfg: ModelConfig, plan: ShardingPlan, dtype):
+    s, d_in, dl, dt_rank = _dims(cfg, plan)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A; dt bias ~ softplus-inverse of [1e-3, 0.1]
+    a_init = jnp.tile(
+        jnp.log(jnp.arange(1, s.d_state + 1, dtype=jnp.float32))[None, :],
+        (dl, 1),
+    )
+    u = jax.random.uniform(ks[6], (dl,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "w_in_x": dense_init(ks[0], d, (d, dl), dtype),
+        "w_in_z": dense_init(ks[1], d, (d, dl), dtype),
+        "conv_w": dense_init(ks[2], s.d_conv, (dl, s.d_conv), dtype),
+        "conv_b": jnp.zeros((dl,), dtype),
+        "x_proj": dense_init(ks[3], dl, (dl, dt_rank + 2 * s.d_state), dtype),
+        "dt_proj": dense_init(ks[4], dt_rank, (dt_rank, dl), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": a_init,
+        "D": jnp.ones((dl,), jnp.float32),
+        "w_out": dense_init(ks[5], dl, (dl, d), dtype),
+    }
+
+
+def _ssm_params(p, xc, cfg, plan):
+    """dt, B, C from the conv output; B/C partial-sums psum'd over tp."""
+    from repro.models.common import resolve_w
+    s = cfg.ssm
+    dt_rank = s.resolved_dt_rank(cfg.d_model)
+    proj = jnp.einsum("...ld,dr->...lr", xc.astype(jnp.float32),
+                      resolve_w(p["x_proj"]).astype(jnp.float32))
+    if plan.tp > 1:
+        proj = lax.psum(proj, plan.tp_axis)
+    dt_in = proj[..., :dt_rank]
+    b_mat = proj[..., dt_rank:dt_rank + s.d_state]
+    c_mat = proj[..., dt_rank + s.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("...lr,rd->...ld", dt_in,
+                   resolve_w(p["dt_proj"]).astype(jnp.float32))
+        + p["dt_bias"]
+    )
+    return dt, b_mat, c_mat
+
+
+def mamba_forward(p, x, cfg: ModelConfig, plan: ShardingPlan,
+                  want_cache: bool = False):
+    """x: (B, S_local, D) seq-sharded -> (same, cache|None)."""
+    s, d_in, dl, _ = _dims(cfg, plan)
+    xb = up(x, p["w_in_x"], plan) if plan.tp > 1 else local_linear(x, p["w_in_x"])
+    zb = up(x, p["w_in_z"], plan) if plan.tp > 1 else local_linear(x, p["w_in_z"])
+    bsz, seq = xb.shape[0], xb.shape[1]
+
+    # causal depthwise conv along the full sequence
+    pad = s.d_conv - 1
+    xp = jnp.pad(xb, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack(
+        [xp[:, i:i + seq, :] for i in range(s.d_conv)], axis=-1
+    )  # (B, S, dl, d_conv)
+    xc = jnp.einsum("bsdk,dk->bsd", windows.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+
+    dt, b_mat, c_mat = _ssm_params(p, xc, cfg, plan)
+    a = -jnp.exp(p["A_log"])  # (dl, n)
+    # discretize: decay (B,S,dl,n), drive (B,S,dl,n)
+    decay = jnp.exp(dt[..., None] * a[None, None])
+    drive = dt[..., None] * b_mat[:, :, None, :] * xc[..., None]
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat) + p["D"] * xc
+    y = (y * jax.nn.silu(zb.astype(jnp.float32))).astype(x.dtype)
+    out = down(y, p["w_out"], plan) if plan.tp > 1 else local_linear(y, p["w_out"])
+
+    cache = None
+    if want_cache:
+        cache = {
+            "h": h[:, -1].astype(jnp.float32),          # (B, dl, n)
+            "conv": xb[:, -pad:].astype(x.dtype) if pad else
+                    jnp.zeros((bsz, 0, dl), x.dtype),   # (B, d_conv-1, dl)
+        }
+    return out, cache
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig, plan: ShardingPlan):
+    """x: (B, 1, D) replicated -> ((B, 1, D) reduced, new cache).  O(1)."""
+    s, d_in, dl, _ = _dims(cfg, plan)
+    xb = local_linear(x, p["w_in_x"])[:, 0]  # (B, dl)
+    zb = local_linear(x, p["w_in_z"])[:, 0]
+
+    conv_hist = jnp.concatenate([cache["conv"], xb[:, None, :]], axis=1)
+    hist = conv_hist if conv_hist.shape[1] == s.d_conv else jnp.pad(
+        conv_hist, ((0, 0), (s.d_conv - conv_hist.shape[1], 0), (0, 0)))
+    xc = jnp.einsum("bkd,dk->bd", hist.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = xc + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+
+    dt, b_mat, c_mat = _ssm_params(p, xc[:, None, :], cfg, plan)
+    dt, b_mat, c_mat = dt[:, 0], b_mat[:, 0], c_mat[:, 0]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * a[None])
+    h = decay * cache["h"] + dt[..., None] * b_mat[:, None, :] * xc[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat) + p["D"] * xc
+    y = (y * jax.nn.silu(zb.astype(jnp.float32))).astype(x.dtype)[:, None, :]
+    out = local_linear(y, p["w_out"])
+    if plan.tp > 1:
+        out = lax.psum(out, plan.tp_axis)
+    new_cache = {"h": h, "conv": conv_hist[:, -(s.d_conv - 1):]
+                 if s.d_conv > 1 else conv_hist[:, :0]}
+    return out, new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, plan: ShardingPlan, batch: int):
+    s, d_in, dl, _ = _dims(cfg, plan)
+    return {
+        "h": ((batch, dl, s.d_state), jnp.float32),
+        "conv": ((batch, s.d_conv - 1, dl), jnp.bfloat16),
+    }

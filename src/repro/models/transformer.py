@@ -1,0 +1,566 @@
+"""Decoder-only LM assembly covering all assigned families.
+
+Heterogeneous stacks (jamba's 1:7 mamba:attn cycle, gemma's local:global
+patterns, deepseek's 3-dense prefix + MoE body) are expressed as
+**segments**: maximal runs of a repeating layer cycle.  Each segment's
+parameters are stacked over its repeat count and executed with
+``lax.scan`` (+ optional remat), so HLO size is O(cycle), not O(depth) —
+what keeps 512-device compiles tractable.
+
+Everything here is per-device manual-SPMD (runs inside one shard_map);
+``plan.tp == 1`` degenerates to plain local math for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ACT,
+    ShardingPlan,
+    dense_init,
+    down,
+    embed_init,
+    embed_lookup,
+    gated_act,
+    local_linear,
+    psum_if,
+    rms_norm,
+    sharded_softmax_xent,
+    softcap,
+    up,
+)
+
+# ---------------------------------------------------------------------------
+# Segment structure
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str          # "attn" | "mamba"
+    mlp: str           # "dense" | "moe" | "none"
+    pattern_idx: int   # index into attention.pattern (window selection)
+
+
+@dataclass(frozen=True)
+class Segment:
+    cycle: Tuple[LayerSpec, ...]
+    count: int
+
+
+def _lcm(*xs: int) -> int:
+    out = 1
+    for x in xs:
+        out = out * x // math.gcd(out, x)
+    return out
+
+
+def layer_spec(cfg: ModelConfig, l: int) -> LayerSpec:
+    kind = cfg.layer_kind(l)
+    if cfg.moe is not None and cfg.moe.is_moe_layer(l):
+        mlp = "moe"
+    elif cfg.d_ff > 0 and kind != "mamba" or (kind == "mamba" and cfg.d_ff > 0
+                                              and cfg.family == "hybrid"):
+        mlp = "dense"
+    else:
+        mlp = "none"
+    # jamba: every layer (incl. mamba) has an MLP/MoE; falcon-mamba: none
+    if kind == "mamba" and cfg.family == "ssm":
+        mlp = "none"
+    pat = 0
+    if cfg.attention is not None:
+        pat = l % len(cfg.attention.pattern)
+    return LayerSpec(kind=kind, mlp=mlp, pattern_idx=pat)
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    pat_len = len(cfg.attention.pattern) if cfg.attention else 1
+    moe_p = cfg.moe.period if cfg.moe else 1
+    cycle_len = _lcm(len(cfg.layer_cycle), pat_len, moe_p)
+    cycle_len = min(cycle_len, cfg.num_layers)
+    descs = [layer_spec(cfg, l) for l in range(cfg.num_layers)]
+    chunks: List[Tuple[LayerSpec, ...]] = []
+    for i in range(0, cfg.num_layers, cycle_len):
+        chunks.append(tuple(descs[i:i + cycle_len]))
+    segments: List[Segment] = []
+    for ch in chunks:
+        if segments and segments[-1].cycle == ch:
+            segments[-1] = Segment(ch, segments[-1].count + 1)
+        else:
+            segments.append(Segment(ch, 1))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig, plan: ShardingPlan,
+               dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if spec.kind == "attn":
+        init_fn = attn_mod.init_mla if cfg.attention.kind == "mla" \
+            else attn_mod.init_gqa
+        p["attn"] = init_fn(ks[0], cfg, plan, dtype)
+    else:
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg, plan, dtype)
+    if spec.mlp != "none":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+    if spec.mlp == "dense":
+        d, f = cfg.d_model, cfg.d_ff
+        fl = plan.shard(f) if plan.tp > 1 else f
+        p["mlp"] = {
+            "w_in": dense_init(ks[1], d, (d, fl), dtype),
+            "w_out": dense_init(ks[2], f, (fl, d), dtype),
+        }
+        if gated_act(cfg.activation):
+            p["mlp"]["w_gate"] = dense_init(ks[3], d, (d, fl), dtype)
+    elif spec.mlp == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, plan, dtype)
+    return p
+
+
+def mlp_forward(p, x, cfg: ModelConfig, plan: ShardingPlan):
+    act = ACT[cfg.activation]
+    if plan.tp == 1:
+        h = local_linear(x, p["w_in"])
+        if "w_gate" in p:
+            h = (act(local_linear(x, p["w_gate"]).astype(jnp.float32))
+                 * h.astype(jnp.float32)).astype(x.dtype)
+        else:
+            h = act(h.astype(jnp.float32)).astype(x.dtype)
+        return local_linear(h, p["w_out"])
+    h = up(x, p["w_in"], plan)
+    if "w_gate" in p:
+        g = up(x, p["w_gate"], plan, tail=act)
+        h = (g.astype(jnp.float32) * h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = act(h.astype(jnp.float32)).astype(x.dtype)
+    return down(h, p["w_out"], plan)
+
+
+def apply_layer(p, x, spec: LayerSpec, cfg: ModelConfig, plan: ShardingPlan,
+                positions, *, want_cache=False, kv_dtype="bfloat16"):
+    """Pre-norm residual layer.  Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        fwd = attn_mod.mla_forward if cfg.attention.kind == "mla" \
+            else attn_mod.gqa_forward
+        o, cache = fwd(p["attn"], h, cfg, spec.pattern_idx, plan, positions,
+                       want_cache=want_cache, kv_dtype=kv_dtype)
+    else:
+        o, cache = ssm_mod.mamba_forward(p["mamba"], h, cfg, plan,
+                                         want_cache=want_cache)
+    x = x + o
+    if spec.mlp != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            x = x + mlp_forward(p["mlp"], h, cfg, plan)
+        else:
+            o, aux = moe_mod.moe_forward(p["moe"], h, cfg, plan)
+            x = x + o
+    return x, cache, aux
+
+
+def decode_layer(p, x, cache, pos, spec: LayerSpec, cfg: ModelConfig,
+                 plan: ShardingPlan, kv_dtype="bfloat16"):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        dec = attn_mod.mla_decode if cfg.attention.kind == "mla" \
+            else attn_mod.gqa_decode
+        o, cache = dec(p["attn"], h, cache, pos, cfg, spec.pattern_idx, plan,
+                       kv_dtype=kv_dtype)
+    else:
+        o, cache = ssm_mod.mamba_decode(p["mamba"], h, cache, cfg, plan)
+    x = x + o
+    if spec.mlp != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            x = x + mlp_forward(p["mlp"], h, cfg, plan)
+        else:
+            o, _ = moe_mod.moe_forward(p["moe"], h, cfg, plan)
+            x = x + o
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(cfg: ModelConfig, plan: ShardingPlan) -> int:
+    return ((cfg.vocab_size + plan.tp - 1) // plan.tp) * plan.tp
+
+
+def vocab_local(cfg: ModelConfig, plan: ShardingPlan) -> int:
+    v = padded_vocab(cfg, plan)
+    return v if plan.global_shapes else v // plan.tp
+
+
+def init_params(key, cfg: ModelConfig, plan: ShardingPlan, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    segments = build_segments(cfg)
+    keys = jax.random.split(key, len(segments) + 4)
+    v_local = vocab_local(cfg, plan)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (v_local, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(
+            keys[1], cfg.d_model, (cfg.d_model, v_local), dtype)
+    if cfg.frontend is not None and cfg.frontend.kind != "none":
+        params["frontend_proj"] = dense_init(
+            keys[2], cfg.frontend.embed_dim,
+            (cfg.frontend.embed_dim, cfg.d_model), dtype)
+    seg_params = []
+    for seg, k in zip(segments, keys[4:]):
+        def one(kk):
+            cks = jax.random.split(kk, len(seg.cycle))
+            return [init_layer(ck, sp, cfg, plan, dtype)
+                    for ck, sp in zip(cks, seg.cycle)]
+        if seg.count == 1:
+            seg_params.append(one(k))
+        else:
+            seg_params.append(jax.vmap(one)(jax.random.split(k, seg.count)))
+    params["segments"] = seg_params
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "layer": init_layer(keys[3], layer_spec(cfg, cfg.num_layers - 1),
+                                cfg, plan, dtype),
+            "proj": dense_init(keys[3], 2 * cfg.d_model,
+                               (2 * cfg.d_model, cfg.d_model), dtype),
+        }
+    return params
+
+
+def _remat_policy(remat: str):
+    if remat == "none":
+        return None
+    if remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable  # "full"
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, plan: ShardingPlan,
+                 extras: Optional[Dict[str, jax.Array]] = None):
+    """tokens: (B, S) global ids -> (B, S_local, D) seq-sharded stream.
+    VLM/audio frontends (stubs) mix precomputed embeddings in."""
+    x = embed_lookup(params["embed"], tokens, plan)  # (B, S, D) replicated
+    if extras and "patch_embeds" in extras and "frontend_proj" in params:
+        img = local_linear(extras["patch_embeds"], params["frontend_proj"])
+        n_img = img.shape[1]
+        s = x.shape[1]
+        pos = jnp.arange(s)
+        img_pad = jnp.pad(img, ((0, 0), (0, s - n_img), (0, 0)))
+        x = jnp.where((pos < n_img)[None, :, None], img_pad, x)
+    if plan.tp > 1 and plan.seq_shard:
+        chunk = x.shape[1] // plan.tp
+        x = lax.dynamic_slice_in_dim(x, plan.tp_index() * chunk, chunk, axis=1)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, plan: ShardingPlan,
+            extras=None, *, want_caches=False, kv_dtype="bfloat16",
+            remat: str = "full"):
+    """-> (hidden (B, S_local, D), caches, aux_loss)."""
+    segments = build_segments(cfg)
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    x = embed_tokens(params, tokens, cfg, plan, extras)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: List[Any] = []
+    policy = _remat_policy(remat)
+
+    for seg, seg_p in zip(segments, params["segments"]):
+        def cycle_fn(x, layer_params):
+            aux_c = jnp.zeros((), jnp.float32)
+            cs = []
+            for lp, spec in zip(layer_params, seg.cycle):
+                x, cache, aux = apply_layer(
+                    lp, x, spec, cfg, plan, positions,
+                    want_cache=want_caches, kv_dtype=kv_dtype)
+                cs.append(cache)
+                aux_c += aux
+            return x, (cs, aux_c)
+
+        if seg.count == 1:
+            x, (cs, aux_c) = cycle_fn(x, seg_p)
+            aux_total += aux_c
+            caches.append(cs)
+        else:
+            body = cycle_fn if policy is None else jax.checkpoint(
+                cycle_fn, policy=policy, prevent_cse=False)
+
+            def scan_body(carry, lp):
+                x = carry
+                x, (cs, aux_c) = body(x, lp)
+                return x, (cs, aux_c)
+
+            x, (cs, aux_seg) = lax.scan(scan_body, x, seg_p)
+            aux_total += jnp.sum(aux_seg)
+            caches.append(cs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (caches if want_caches else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Heads / loss
+# ---------------------------------------------------------------------------
+
+
+def _head_weight(params, cfg):
+    from repro.models.common import resolve_w
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (D, V_local)
+    return resolve_w(params["head"])
+
+
+def lm_logits_local(params, h, cfg: ModelConfig, plan: ShardingPlan):
+    """h: (B, n, D) -> (B, n, V_local) vocab-sharded logits."""
+    logits = jnp.einsum("bnd,dv->bnv", h.astype(jnp.float32),
+                        _head_weight(params, cfg).astype(jnp.float32))
+    return softcap(logits, cfg.final_softcap)
+
+
+def _chunked_xent(h_gathered, labels, w, cfg, plan, xent_chunk: int):
+    """Sequence-chunked CE over vocab-sharded head weights — the full
+    (S, V) logits tensor never exists (Domino locality applied to the
+    largest tensor in LM training).  Differentiable (static trip count)."""
+    b, s, d = h_gathered.shape
+    v_local = w.shape[1]
+    n_chunks = max(1, s // min(xent_chunk, s))
+    while s % n_chunks:
+        n_chunks -= 1
+    hs = h_gathered.reshape(b, n_chunks, s // n_chunks, d)
+    ls = labels.reshape(b, n_chunks, s // n_chunks)
+    vm_all = (labels >= 0).reshape(b, n_chunks, s // n_chunks)
+    xent_plan = ShardingPlan(tp=plan.tp, tp_axis=plan.tp_axis, dp_axes=())
+
+    def chunk_loss(i, acc):
+        hc, lc, vm = hs[:, i], ls[:, i], vm_all[:, i]
+        logits = jnp.einsum("bnd,dv->bnv", hc.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        logits = softcap(logits, cfg.final_softcap)
+        logits = _mask_pad_vocab(logits, cfg, plan, v_local)
+        loss = sharded_softmax_xent(logits, jnp.maximum(lc, 0), xent_plan,
+                                    valid=vm)
+        cnt = jnp.sum(vm.astype(jnp.float32))
+        return acc[0] + loss * cnt, acc[1] + cnt
+
+    total, count = lax.fori_loop(
+        0, n_chunks, chunk_loss,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)))
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, plan: ShardingPlan,
+            remat: str = "full", xent_chunk: int = 1024):
+    """batch: {tokens (B,S), labels (B,S), [patch_embeds]} -> scalar loss."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h_local, _, aux = forward(params, tokens, cfg, plan, extras=batch,
+                              want_caches=False, remat=remat)
+    if plan.tp > 1 and plan.seq_shard:
+        h = lax.all_gather(h_local, plan.tp_axis, axis=1, tiled=True)
+    else:
+        h = h_local
+    s = h.shape[1]
+    w = _head_weight(params, cfg)
+    loss = _chunked_xent(h, labels, w, cfg, plan, xent_chunk)
+    if plan.dp_axes:
+        loss = lax.pmean(loss, plan.dp_axes)
+        aux = lax.pmean(aux, plan.dp_axes)
+
+    # deepseek MTP: predict t+2 from (h_t, emb(t+1)) through one extra
+    # layer sharing the embedding/head — run on the seq-sharded stream
+    # with the same plan so all weight shapes line up.
+    if cfg.mtp_depth > 0 and "mtp" in params:
+        emb_next = embed_lookup(params["embed"], jnp.maximum(labels, 0), plan)
+        if plan.tp > 1 and plan.seq_shard:
+            chunk = s // plan.tp
+            emb_next = lax.dynamic_slice_in_dim(
+                emb_next, plan.tp_index() * chunk, chunk, axis=1)
+        hcat = jnp.concatenate([h_local, emb_next.astype(h_local.dtype)],
+                               axis=-1)
+        hm = local_linear(hcat, params["mtp"]["proj"])
+        spec = layer_spec(cfg, cfg.num_layers - 1)
+        hm, _, _ = apply_layer(params["mtp"]["layer"], hm, spec, cfg, plan,
+                               jnp.arange(s))
+        if plan.tp > 1 and plan.seq_shard:
+            hm = lax.all_gather(hm, plan.tp_axis, axis=1, tiled=True)
+        mtp_labels = jnp.pad(labels[:, 2:], ((0, 0), (0, 2)),
+                             constant_values=-1)
+        mtp_loss = _chunked_xent(hm, mtp_labels, w, cfg, plan, xent_chunk)
+        if plan.dp_axes:
+            mtp_loss = lax.pmean(mtp_loss, plan.dp_axes)
+        loss = loss + 0.1 * mtp_loss
+    return loss + aux
+
+
+def _mask_pad_vocab(logits_local, cfg, plan, v_local):
+    lo = plan.tp_index() * v_local
+    col = lo + jnp.arange(v_local)
+    return jnp.where((col < cfg.vocab_size)[None, None, :], logits_local, -1e30)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _to_ring(arr, seq_axis: int, s: int, ring: int):
+    """Re-layout a linear [0, s) cache into the decode ring buffer of
+    length `ring` (slot of token p = p % ring)."""
+    if s <= ring:
+        pad = [(0, 0)] * arr.ndim
+        pad[seq_axis] = (0, ring - s)
+        return jnp.pad(arr, pad)
+    seg = lax.slice_in_dim(arr, s - ring, s, axis=seq_axis)
+    return jnp.roll(seg, (s - ring) % ring, axis=seq_axis)
+
+
+def prepare_decode_caches(caches, cfg: ModelConfig, plan: ShardingPlan,
+                          s: int, s_max: int):
+    """Grow prefill caches (length s) to decode capacity (s_max), turning
+    sliding-window layers into their ring-buffer layout."""
+    segments = build_segments(cfg)
+    out = []
+    for seg, seg_c in zip(segments, caches):
+        cycle_out = []
+        for spec, c in zip(seg.cycle, seg_c):
+            if c is None or spec.kind == "mamba":
+                cycle_out.append(c)
+                continue
+            seq_chunk = False
+            if cfg.attention.kind == "mla":
+                target, seq_axis = s_max, -2
+            else:
+                window = cfg.attention.layer_window(spec.pattern_idx)
+                target = s_max if window is None else \
+                    attn_mod._ring_len(window, s_max)
+                seq_axis = -3  # (..., S, KV, hd)
+                if attn_mod.use_seq_cache(cfg, plan, window):
+                    target = attn_mod._pad_to(s_max, plan.tp)
+                    seq_chunk = True
+            new_c = {}
+            for name, arr in c.items():
+                ax = seq_axis if name in ("k", "v", "k_scale", "v_scale") \
+                    else (-2 if name in ("c", "c_scale") else None)
+                if name in ("c", "c_scale"):
+                    ax = -2
+                padded = _to_ring(arr, arr.ndim + ax, s, target)
+                if seq_chunk:
+                    # replicated prefill computed the full cache; keep only
+                    # this device's sequence chunk
+                    chunk = target // plan.tp
+                    padded = lax.dynamic_slice_in_dim(
+                        padded, plan.tp_index() * chunk, chunk,
+                        axis=padded.ndim + ax)
+                new_c[name] = padded
+            cycle_out.append(new_c)
+        out.append(cycle_out)
+    return out
+
+
+def prefill(params, tokens, cfg: ModelConfig, plan: ShardingPlan,
+            extras=None, kv_dtype="bfloat16", remat: str = "none",
+            s_max: Optional[int] = None):
+    """-> (last-token logits (B, V_pad) replicated, caches ready for
+    decode up to s_max positions)."""
+    h, caches, _ = forward(params, tokens, cfg, plan, extras=extras,
+                           want_caches=True, kv_dtype=kv_dtype, remat=remat)
+    if s_max is not None and s_max != tokens.shape[1]:
+        caches = prepare_decode_caches(caches, cfg, plan, tokens.shape[1],
+                                       s_max)
+    last = h[:, -1]  # correct only on the last tp shard
+    if plan.tp > 1 and plan.seq_shard:
+        i = plan.tp_index()
+        last = psum_if(jnp.where(i == plan.tp - 1, last, 0.0), plan)
+    logits_local = lm_logits_local(params, last[:, None], cfg, plan)[:, 0]
+    v_local = logits_local.shape[-1]
+    logits_local = _mask_pad_vocab(
+        logits_local[:, None], cfg, plan, v_local)[:, 0]
+    if plan.tp > 1:
+        logits = lax.all_gather(logits_local, plan.tp_axis, axis=1, tiled=True)
+    else:
+        logits = logits_local
+    return logits, caches
+
+
+def decode_step(params, token, caches, pos, cfg: ModelConfig,
+                plan: ShardingPlan, kv_dtype="bfloat16"):
+    """token: (B,) int32; pos: scalar current position.  -> (logits, caches)."""
+    segments = build_segments(cfg)
+    x = embed_lookup(params["embed"], token[:, None], plan)  # (B,1,D)
+    new_caches = []
+    for seg, seg_p, seg_c in zip(segments, params["segments"], caches):
+        if seg.count == 1:
+            cs = []
+            for lp, spec, c in zip(seg_p, seg.cycle, seg_c):
+                x, c = decode_layer(lp, x, c, pos, spec, cfg, plan,
+                                    kv_dtype=kv_dtype)
+                cs.append(c)
+            new_caches.append(cs)
+        else:
+            def body(x, pc):
+                lp, cs_in = pc
+                cs_out = []
+                for j, spec in enumerate(seg.cycle):
+                    x, cj = decode_layer(lp[j], x, cs_in[j], pos, spec, cfg,
+                                         plan, kv_dtype=kv_dtype)
+                    cs_out.append(cj)
+                return x, cs_out
+
+            x, cs = lax.scan(body, x, (seg_p, seg_c))
+            new_caches.append(cs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits_local = lm_logits_local(params, x, cfg, plan)[:, 0]
+    v_local = logits_local.shape[-1]
+    logits_local = _mask_pad_vocab(
+        logits_local[:, None], cfg, plan, v_local)[:, 0]
+    if plan.tp > 1:
+        logits = lax.all_gather(logits_local, plan.tp_axis, axis=1, tiled=True)
+    else:
+        logits = logits_local
+    return logits, new_caches
+
+
+def init_cache(cfg: ModelConfig, plan: ShardingPlan, batch: int, s_max: int,
+               kv_dtype="bfloat16"):
+    """Zero caches mirroring the segment structure (stacked over count)."""
+    segments = build_segments(cfg)
+    out = []
+    for seg in segments:
+        cycle_caches = []
+        for spec in seg.cycle:
+            if spec.kind == "mamba":
+                shapes = ssm_mod.mamba_cache_shape(cfg, plan, batch)
+            elif cfg.attention.kind == "mla":
+                shapes = attn_mod.mla_cache_shape(cfg, plan, batch, s_max,
+                                                  kv_dtype)
+            else:
+                shapes = attn_mod.gqa_cache_shape(cfg, plan, batch, s_max,
+                                                  spec.pattern_idx, kv_dtype)
+            c = {k: jnp.zeros(sh, dt) for k, (sh, dt) in shapes.items()}
+            cycle_caches.append(c)
+        if seg.count > 1:
+            cycle_caches = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (seg.count,) + a.shape).copy(),
+                cycle_caches)
+        out.append(cycle_caches)
+    return out

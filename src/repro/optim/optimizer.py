@@ -1,0 +1,254 @@
+"""Optimizers built from scratch (no optax in this container):
+
+* **AdamW** — fp32 or bf16 moments (``moment_dtype``), decoupled decay;
+* **Adafactor** — factored second moment, no momentum: the optimizer for
+  deepseek-v3-671b training, where Adam state (12 B/param x 671e9) cannot
+  fit the pod (T5X practice);
+* **SGD** (momentum optional) — baseline / examples.
+
+ZeRO: optimizer state PartitionSpecs are emitted by
+:func:`state_partition_specs` — states shard over *all* mesh axes on the
+largest dim; XLA inserts the reduce-scatter / all-gather around the
+elementwise update (ZeRO-1 via GSPMD).
+
+Distributed trick: :func:`compress_gradients` /
+:func:`decompress_gradients` implement int8 gradient quantization with
+error feedback, halving (vs bf16) gradient all-reduce bytes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any          # first moment  (AdamW/SGD-momentum; () for adafactor)
+    v: Any          # second moment (AdamW) / factored pair (adafactor)
+    err: Any        # error-feedback residual for gradient compression (())
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * warm * (0.1 + 0.9 * cos)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Init / update
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params, cfg: TrainConfig,
+                   compression: bool = False) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    if cfg.optimizer == "adamw":
+        m = jax.tree.map(zeros, params)
+        v = jax.tree.map(zeros, params)
+    elif cfg.optimizer == "adafactor":
+        m = ()
+        v = jax.tree.map(_adafactor_init, params)
+    elif cfg.optimizer == "sgd":
+        m = jax.tree.map(zeros, params)
+        v = ()
+    else:
+        raise ValueError(cfg.optimizer)
+    err = jax.tree.map(zeros, params) if compression else ()
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v, err=err)
+
+
+def _adafactor_init(p):
+    if p.ndim >= 2:
+        return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+    return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gsq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0)
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def apply_updates(params, grads, state: OptState, cfg: TrainConfig
+                  ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg)(step)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    if cfg.optimizer == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 ** 2
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + 1e-8)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_state = OptState(step, new_m, new_v, state.err)
+
+    elif cfg.optimizer == "adafactor":
+        decay = 1.0 - (step.astype(jnp.float32)) ** -0.8
+
+        def upd(p, g, vf):
+            g32 = g.astype(jnp.float32)
+            sq = g32 ** 2 + 1e-30
+            if p.ndim >= 2:
+                row = decay * vf["row"] + (1 - decay) * jnp.mean(sq, axis=-1)
+                col = decay * vf["col"] + (1 - decay) * jnp.mean(sq, axis=-2)
+                vhat = (row[..., None] * col[..., None, :]
+                        / jnp.maximum(jnp.mean(row, axis=-1,
+                                               keepdims=True)[..., None], 1e-30))
+                new_vf = {"row": row, "col": col}
+            else:
+                full = decay * vf["full"] + (1 - decay) * sq
+                vhat = full
+                new_vf = {"full": full}
+            delta = g32 / jnp.maximum(jnp.sqrt(vhat), 1e-30)
+            # relative update clipping (Adafactor d=1.0)
+            rms = jnp.sqrt(jnp.mean(delta ** 2) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return p_new.astype(p.dtype), new_vf
+
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        vflat = tdef.flatten_up_to(state.v)
+        res = [upd(p, g, v) for p, g, v in zip(flat, gflat, vflat)]
+        new_params = tdef.unflatten([r[0] for r in res])
+        new_v = tdef.unflatten([r[1] for r in res])
+        new_state = OptState(step, (), new_v, state.err)
+
+    elif cfg.optimizer == "sgd":
+        def upd(p, g, m):
+            m_new = 0.9 * m.astype(jnp.float32) + g.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * m_new
+            return p_new.astype(p.dtype), m_new.astype(mdt)
+
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        mflat = tdef.flatten_up_to(state.m)
+        res = [upd(p, g, m) for p, g, m in zip(flat, gflat, mflat)]
+        new_params = tdef.unflatten([r[0] for r in res])
+        new_m = tdef.unflatten([r[1] for r in res])
+        new_state = OptState(step, new_m, (), state.err)
+    else:
+        raise ValueError(cfg.optimizer)
+
+    metrics = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# ZeRO sharding specs
+# ---------------------------------------------------------------------------
+
+
+def zero_spec_for(p_spec: Optional[P], shape: Tuple[int, ...],
+                  zero_axes: Tuple[str, ...]) -> P:
+    """Shard an optimizer-state leaf over ``zero_axes`` on its largest
+    unsharded dim (ZeRO-1); falls back to the param's own spec."""
+    base = list(p_spec) if p_spec is not None else [None] * len(shape)
+    while len(base) < len(shape):
+        base.append(None)
+    # a mesh axis can shard at most one dim: drop axes the param already uses
+    used = set()
+    for entry in base:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    avail = tuple(a for a in zero_axes if a not in used)
+    if not avail or not shape:
+        return P(*base)
+    free = [i for i, s in enumerate(base) if s is None and shape[i] > 1]
+    if not free:
+        return P(*base)
+    target = max(free, key=lambda i: shape[i])
+    if shape[target] % _axes_size_hint(avail):
+        return P(*base)
+    base[target] = avail if len(avail) > 1 else avail[0]
+    return P(*base)
+
+
+_AXIS_SIZES: Dict[str, int] = {}
+
+
+def set_axis_sizes(sizes: Dict[str, int]) -> None:
+    _AXIS_SIZES.update(sizes)
+
+
+def _axes_size_hint(axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= _AXIS_SIZES.get(a, 1)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+
+def compress_gradients(grads, err):
+    """Returns (int8 grads, scales, new_err).  g_comp = Q(g + err);
+    err' = (g + err) - deQ(g_comp): the residual re-enters next step, so
+    compression error doesn't accumulate (Seide et al., 1-bit SGD lineage)."""
+    def comp(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(g32))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -128, 127).astype(jnp.int8)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_e.astype(e.dtype)
+
+    flat, tdef = jax.tree.flatten(grads)
+    eflat = tdef.flatten_up_to(err)
+    out = [comp(g, e) for g, e in zip(flat, eflat)]
+    qs = tdef.unflatten([o[0] for o in out])
+    scales = tdef.unflatten([o[1] for o in out])
+    new_err = tdef.unflatten([o[2] for o in out])
+    return qs, scales, new_err
+
+
+def decompress_gradients(qs, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), qs, scales)

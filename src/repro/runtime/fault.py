@@ -1,0 +1,96 @@
+"""Fault tolerance & straggler mitigation for long-running training.
+
+On a real pod, device failure surfaces as a raised exception from the
+step function (XLA ICI timeout / halted collective).  The policy here:
+
+* :class:`StepGuard` — wraps the jitted step; on failure it (1) waits
+  out the configured backoff, (2) triggers the recovery callback
+  (re-create mesh on the survivors / restore latest checkpoint), and
+  (3) replays from the last committed step using the deterministic
+  data pipeline (batch = f(seed, step)).
+* :class:`StragglerMonitor` — EWMA of step wall-times; flags steps
+  slower than ``threshold``x the running mean.  On TPU SPMD a straggler
+  stalls every peer at the next collective, so mitigation = report +
+  (configurable) checkpoint-and-reshard once flagged repeatedly.
+* :func:`elastic_remesh` — builds the largest (data, model)-factorable
+  mesh from the devices that remain, for restore-and-continue.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.1           # EWMA coefficient
+    threshold: float = 2.0       # flag steps slower than 2x the mean
+    trip_limit: int = 3          # consecutive flags before escalation
+    mean_s: float = 0.0
+    trips: int = 0
+    flagged_steps: List[int] = field(default_factory=list)
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        """Returns True when escalation (reshard / evict) is advised."""
+        if self.mean_s == 0.0:
+            self.mean_s = duration_s
+            return False
+        slow = duration_s > self.threshold * self.mean_s
+        if slow:
+            self.trips += 1
+            self.flagged_steps.append(step)
+        else:
+            self.trips = 0
+            # slow steps don't poison the baseline
+            self.mean_s = (1 - self.alpha) * self.mean_s + self.alpha * duration_s
+        return self.trips >= self.trip_limit
+
+
+@dataclass
+class StepGuard:
+    """Retry-with-recovery wrapper around the training step."""
+
+    recover: Callable[[int], None]      # callback(last_good_step)
+    max_retries: int = 3
+    backoff_s: float = 1.0
+    failures: int = 0
+
+    def run(self, step_fn: Callable, step: int, *args):
+        for attempt in range(self.max_retries + 1):
+            try:
+                out = step_fn(*args)
+                # block so device-side failures surface *inside* the guard
+                jax.block_until_ready(out)
+                return out
+            except Exception:  # noqa: BLE001 — any device/runtime fault
+                self.failures += 1
+                if attempt == self.max_retries:
+                    raise
+                time.sleep(self.backoff_s * (2 ** attempt))
+                self.recover(step - 1)
+        raise RuntimeError("unreachable")
+
+
+def elastic_remesh(devices: Optional[List] = None,
+                   model_parallelism: int = 16):
+    """Build the largest (data, model) mesh from surviving devices.
+
+    Keeps the model axis intact (weight shards must stay complete) and
+    shrinks the data axis — the standard elastic-DP policy.  Returns
+    (mesh, dropped_devices)."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    model = math.gcd(model_parallelism, n)
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    usable = devices[: data * model]
+    import numpy as np
+    from jax.sharding import Mesh
+
+    arr = np.array(usable).reshape(data, model)
+    return Mesh(arr, ("data", "model")), devices[data * model:]

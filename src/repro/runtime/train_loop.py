@@ -1,0 +1,288 @@
+"""Train-step construction: shard_map'd loss, GSPMD/ZeRO optimizer update,
+microbatch gradient accumulation, optional int8 gradient compression.
+
+Layering (see DESIGN.md):
+* the *loss* runs as manual SPMD inside one ``jax.shard_map`` — that is
+  where Domino's ring dataflow lives;
+* ``jax.value_and_grad`` wraps the shard_map — gradient DP reductions are
+  the shard_map transpose (pmean backprop);
+* the optimizer update is plain GSPMD: states carry ZeRO PartitionSpecs
+  and XLA inserts the scatter/gather.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.common import ShardingPlan
+from repro.optim import optimizer as opt
+from repro.runtime.partition import derive_specs, shardings_from_specs
+
+
+def make_plan(cfg: ModelConfig, mesh, pcfg: ParallelConfig) -> ShardingPlan:
+    import dataclasses
+
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if pcfg.dp_only:
+        # weight duplication at pod scale: every axis is a data axis
+        plan = ShardingPlan.for_model(
+            cfg, tp=1, dp_axes=tuple(mesh.axis_names),
+            reduction=pcfg.reduction)
+        return dataclasses.replace(plan, seq_cache=False)
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    plan = ShardingPlan.for_model(
+        cfg, tp=axes.get("model", 1), dp_axes=dp_axes,
+        reduction=pcfg.reduction)
+    return dataclasses.replace(plan, seq_cache=pcfg.seq_sharded_cache)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    try:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # older keyword
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
+@dataclass
+class TrainProgram:
+    """Everything the launcher needs: jitted fns + sharding trees."""
+
+    cfg: ModelConfig
+    plan: ShardingPlan
+    mesh: Any
+    param_specs: Any
+    opt_specs: Any
+    batch_spec_fn: Callable
+    init_fn: Callable           # (seed) -> (params, opt_state), sharded
+    step_fn: Callable           # (params, opt_state, batch) -> (..., metrics)
+
+
+def loss_for(cfg: ModelConfig):
+    return ED.encdec_loss if cfg.is_encdec else T.lm_loss
+
+
+def init_for(cfg: ModelConfig):
+    return ED.init_params if cfg.is_encdec else T.init_params
+
+
+def _batch_pspec(batch_tree: Dict[str, Any], plan: ShardingPlan,
+                 dp_size: Optional[int] = None):
+    """Batch dim over the data axes — unless it doesn't divide (e.g.
+    long_500k's batch=1), in which case it replicates."""
+    dp = plan.dp_axes if len(plan.dp_axes) != 1 else (
+        plan.dp_axes[0] if plan.dp_axes else None)
+    out = {}
+    for k, v in batch_tree.items():
+        use_dp = dp is not None and (
+            dp_size is None or v.shape[0] % dp_size == 0)
+        out[k] = P(dp if use_dp else None, *([None] * (v.ndim - 1)))
+    return out
+
+
+def dp_size_of(mesh, plan: ShardingPlan) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in plan.dp_axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _zero3_plan(cfg, g_shapes, param_specs, plan, dp_size: int,
+                min_size: int = 1 << 22):
+    """path -> (gather_dim_in_consumed_coords) for ZeRO-3 leaves.
+
+    Stacked segment leaves are consumed *after* the layer scan slices
+    their leading dim, so their gather dim is stored in sliced coords."""
+    from repro.models import transformer as T
+    from repro.runtime.serve_loop import QUANTIZABLE
+    import re as _re
+
+    seg_counts = {}
+    if not cfg.is_encdec:
+        for i, seg in enumerate(T.build_segments(cfg)):
+            seg_counts[i] = seg.count
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(g_shapes)[0]
+    spec_flat = jax.tree.leaves(param_specs)
+    for (path, leaf), spec in zip(flat, spec_flat):
+        name = "/".join(str(p) for p in path)
+        last = _re.sub(r"[^\w]", "", str(path[-1]))
+        if last not in QUANTIZABLE or leaf.size < min_size:
+            continue
+        stacked = ("segments" in name and len(path) >= 2
+                   and seg_counts.get(getattr(path[1], "idx", -1), 1) > 1)
+        start = 1 if stacked else 0
+        used = list(spec) + [None] * (leaf.ndim - len(spec))
+        cands = [d for d in range(start, leaf.ndim)
+                 if used[d] is None and leaf.shape[d] % dp_size == 0]
+        if not cands:
+            continue
+        dim = max(cands, key=lambda d: leaf.shape[d])
+        out[name] = (dim, dim - 1 if stacked else dim)
+    return out
+
+
+def build_train_program(cfg: ModelConfig, mesh, pcfg: ParallelConfig,
+                        tcfg: TrainConfig) -> TrainProgram:
+    plan = make_plan(cfg, mesh, pcfg)
+    init_fn_model = init_for(cfg)
+    loss_fn_model = loss_for(cfg)
+
+    # --- auto-derive parameter specs (global vs local shapes) ---
+    g_shapes = jax.eval_shape(
+        lambda k: init_fn_model(k, cfg, plan.as_global()),
+        jax.random.PRNGKey(0))
+    l_shapes = jax.eval_shape(
+        lambda k: init_fn_model(k, cfg, plan), jax.random.PRNGKey(0))
+    param_specs = derive_specs(g_shapes, l_shapes, plan.tp, plan.tp_axis)
+
+    # --- ZeRO-3: shard big weights over the data axes too; patch specs ---
+    z3 = {}
+    if pcfg.zero3 and plan.dp_axes:
+        z3 = _zero3_plan(cfg, g_shapes, param_specs, plan,
+                         dp_size_of(mesh, plan), pcfg.zero3_min_size)
+        dp = plan.dp_axes if len(plan.dp_axes) > 1 else plan.dp_axes[0]
+
+        def patch(path, spec, leaf):
+            name = "/".join(str(p) for p in path)
+            if name not in z3:
+                return spec
+            dim_full, _ = z3[name]
+            entries = list(spec) + [None] * (leaf.ndim - len(spec))
+            entries[dim_full] = dp
+            return P(*entries)
+
+        param_specs = jax.tree_util.tree_map_with_path(
+            patch, param_specs, g_shapes,
+            is_leaf=lambda s: isinstance(s, P))
+
+    # --- ZeRO specs for optimizer state ---
+    opt.set_axis_sizes(dict(zip(mesh.axis_names, mesh.devices.shape)))
+    opt_shapes = jax.eval_shape(
+        lambda: opt.init_opt_state(g_shapes, tcfg, pcfg.grad_compression))
+    pspec_flat = {id(l): s for l, s in zip(
+        jax.tree.leaves(g_shapes), jax.tree.leaves(param_specs))}
+
+    def opt_spec_tree(state_tree, like_params):
+        def one(s_leaf, p_spec):
+            return opt.zero_spec_for(p_spec, s_leaf.shape, pcfg.zero_axes)
+        return jax.tree.map(one, state_tree, like_params)
+
+    opt_specs = opt.OptState(
+        step=P(),
+        m=(opt_spec_tree(opt_shapes.m, param_specs) if opt_shapes.m != ()
+           else ()),
+        v=(jax.tree.map(
+            lambda l: opt.zero_spec_for(None, l.shape, pcfg.zero_axes),
+            opt_shapes.v) if opt_shapes.v != () else ()),
+        err=(opt_spec_tree(opt_shapes.err, param_specs)
+             if opt_shapes.err != () else ()),
+    )
+
+    # --- sharded init ---
+    param_shardings = shardings_from_specs(mesh, param_specs)
+    opt_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), opt_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+    @functools.partial(jax.jit,
+                       out_shardings=(param_shardings, opt_shardings))
+    def init_fn(seed):
+        params = init_fn_model(jax.random.PRNGKey(seed), cfg,
+                               plan.as_global())
+        state = opt.init_opt_state(params, tcfg, pcfg.grad_compression)
+        return params, state
+
+    # --- loss: shard_map over the mesh ---
+    from repro.models.common import Zero3
+
+    def _wrap_z3(params):
+        def wrap(path, leaf):
+            name = "/".join(str(p) for p in path)
+            if name in z3:
+                return Zero3(leaf, z3[name][1], plan.dp_axes)
+            return leaf
+        return jax.tree_util.tree_map_with_path(wrap, params)
+
+    def make_loss(batch_tree):
+        bspecs = _batch_pspec(batch_tree, plan)
+
+        def per_device(params, batch):
+            if z3:
+                params = _wrap_z3(params)
+            return loss_fn_model(params, batch, cfg, plan, remat=pcfg.remat)
+
+        return _shard_map(
+            per_device, mesh,
+            in_specs=(param_specs, bspecs),
+            out_specs=P(),
+        ), bspecs
+
+    # --- ZeRO gradient sharding: grads (and the microbatch accumulator)
+    # live reduce-scattered over the data axes, not replicated — without
+    # this, a 671B f32 accumulator costs 167 GB/device.
+    grad_specs = jax.tree.map(
+        lambda leaf, spec: opt.zero_spec_for(spec, leaf.shape,
+                                             pcfg.zero_axes),
+        g_shapes, param_specs)
+    grad_shardings = shardings_from_specs(mesh, grad_specs)
+
+    def _scatter(tree):
+        return jax.lax.with_sharding_constraint(tree, grad_shardings)
+
+    # --- the jitted train step ---
+    def step_fn_py(params, opt_state, batch):
+        loss_sm, _ = make_loss(batch)
+        if pcfg.microbatches > 1:
+            def one_micro(carry, mb):
+                acc, = carry
+                l, g = jax.value_and_grad(loss_sm)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc,
+                    _scatter(g))
+                return (acc,), l
+
+            micro = {k: v.reshape(pcfg.microbatches,
+                                  v.shape[0] // pcfg.microbatches,
+                                  *v.shape[1:])
+                     for k, v in batch.items()}
+            zero = _scatter(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum,), losses = jax.lax.scan(one_micro, (zero,), micro)
+            grads = jax.tree.map(
+                lambda g: (g / pcfg.microbatches), gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_sm)(params, batch)
+            grads = _scatter(grads)
+
+        if pcfg.grad_compression:
+            qs, scales, new_err = opt.compress_gradients(grads, opt_state.err)
+            grads = opt.decompress_gradients(qs, scales)
+            opt_state = opt_state._replace(err=new_err)
+        new_params, new_state, metrics = opt.apply_updates(
+            params, grads, opt_state, tcfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    step_fn = jax.jit(
+        step_fn_py,
+        donate_argnums=(0, 1),
+        out_shardings=(param_shardings, opt_shardings, None),
+    )
+
+    return TrainProgram(
+        cfg=cfg, plan=plan, mesh=mesh, param_specs=param_specs,
+        opt_specs=opt_specs, batch_spec_fn=lambda b: _batch_pspec(b, plan),
+        init_fn=init_fn, step_fn=step_fn,
+    )

@@ -1,0 +1,213 @@
+"""ISA roundtrip, schedule well-formedness, and the paper's central claim:
+compiled instruction tables drive tiles to compute exact convolutions
+"on the move" (Figs. 5/6/9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.instructions import (
+    ACT_EN,
+    BUF_POP,
+    BUF_PUSH,
+    FROM_PE,
+    SUM_ADD,
+    TABLE_CAPACITY,
+    Instruction,
+    Opcode,
+    Port,
+    assemble,
+    disassemble,
+)
+from repro.core.schedule import compile_conv_block, compile_fc_block
+from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
+
+
+# ---------------------------------------------------------------------------
+# ISA
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    opc=st.sampled_from([Opcode.C, Opcode.M]),
+    rx=st.integers(0, 31),
+    func=st.integers(0, 63),
+    tx=st.integers(0, 15),
+)
+def test_instruction_roundtrip(opc, rx, func, tx):
+    ins = Instruction(opc, rx=rx, func=func, tx=tx)
+    word = ins.encode()
+    assert 0 <= word < 2 ** 16  # 16-bit ISA (Tab. 2)
+    back = Instruction.decode(word)
+    assert back == ins
+
+
+def test_assemble_disassemble():
+    prog = [
+        Instruction(Opcode.C, rx=1 << Port.W, func=FROM_PE | SUM_ADD, tx=2),
+        Instruction(Opcode.M, func=ACT_EN),
+    ]
+    words = assemble(prog)
+    assert disassemble(words) == prog
+
+
+# ---------------------------------------------------------------------------
+# Schedule compiler
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_periodicity_and_capacity():
+    sched = compile_conv_block("c1", h=16, w=16, c_in=8, c_out=4, k=3,
+                               stride=1, pad=1)
+    assert sched.period == 16 + 2 * 1  # p tracks W + 2P (paper §6.2)
+    assert len(sched.tiles) == 9  # K^2 x 1 mapping
+    for t in sched.tiles:
+        assert len(t.table) == sched.period <= TABLE_CAPACITY
+    # group heads never SUM_ADD; non-heads always do on firing phases
+    for t in sched.tiles:
+        for w in t.table:
+            ins = Instruction.decode(w)
+            if ins.is_nop:
+                continue
+            assert ins.has(FROM_PE)
+            assert ins.has(SUM_ADD) == (not t.is_group_head)
+            # only tails of groups >0 touch the Rofm buffer
+            assert ins.has(BUF_POP) == (t.is_group_tail and t.tap_row > 0)
+            assert ins.has(BUF_PUSH) == (t.is_group_tail and t.tap_row > 0)
+
+
+def test_schedule_rejects_oversized_period():
+    with pytest.raises(ValueError):
+        compile_conv_block("big", h=224, w=224, c_in=3, c_out=64, k=3,
+                           stride=1, pad=1)  # 226 > 128-entry table
+
+
+def test_fc_schedule_shape():
+    m_t, m_a, tables = compile_fc_block("fc", 600, 300, n_c=256, n_m=128)
+    assert (m_t, m_a) == (3, 3)  # ceil(600/256) x ceil(300/128)
+    assert len(tables) == m_t and len(tables[0]) == m_a
+
+
+# ---------------------------------------------------------------------------
+# Computing-on-the-move == convolution oracle
+# ---------------------------------------------------------------------------
+
+
+def _conv_oracle(ifm, w, b, stride, pad, relu=True):
+    """jax.lax conv in NHWC/HWIO, float64 for exactness."""
+    out = jax.lax.conv_general_dilated(
+        jnp.asarray(ifm, jnp.float64)[None],
+        jnp.asarray(w, jnp.float64),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    out = out + jnp.asarray(b, jnp.float64)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return np.asarray(out)
+
+
+def _int_data(key, shape, lo=-4, hi=5):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(key), shape, lo, hi), np.float64
+    )
+
+
+CASES = [
+    # h, w, c, m, k, stride, pad, pack
+    (8, 8, 3, 4, 3, 1, 1, 1),
+    (8, 10, 2, 5, 3, 1, 0, 1),
+    (9, 9, 4, 4, 5, 1, 2, 1),
+    (8, 8, 3, 4, 3, 2, 1, 1),   # stride 2 ("shielded" slots)
+    (12, 12, 2, 3, 3, 2, 0, 1),
+    (8, 8, 3, 4, 3, 1, 1, 3),   # full-row packing (N_c > C case)
+    (9, 9, 2, 4, 5, 1, 2, 2),   # partial packing, ragged last pack
+    (10, 10, 1, 2, 1, 1, 0, 1), # 1x1 conv degenerate chain
+]
+
+
+@pytest.mark.parametrize("h,w,c,m,k,stride,pad,pack", CASES)
+def test_conv_on_the_move_matches_oracle(h, w, c, m, k, stride, pad, pack):
+    ifm = _int_data(1 + h + k, (h, w, c))
+    wts = _int_data(2 + m, (k, k, c, m))
+    b = _int_data(3, (m,))
+    sched = compile_conv_block("t", h, w, c, m, k, stride, pad, pack=pack)
+    sim = BlockSimulator(sched, wts, bias=b)
+    got = sim.run(ifm)
+    want = _conv_oracle(ifm, wts, b, stride, pad)
+    np.testing.assert_array_equal(got, want)
+    # every MAC was executed exactly once (no duplication in the dataflow)
+    e = (h + 2 * pad - k + stride) // stride
+    f = (w + 2 * pad - k + stride) // stride
+    assert sim.counters.macs == e * f * k * k * c * m
+
+
+def test_conv_with_maxpool_matches_oracle():
+    h = w = 8
+    c, m, k = 3, 4, 3
+    ifm = _int_data(7, (h, w, c))
+    wts = _int_data(8, (k, k, c, m))
+    b = np.zeros(m)
+    sched = compile_conv_block("p", h, w, c, m, k, 1, 1, pool_k=2, pool_s=2)
+    got = BlockSimulator(sched, wts, bias=b).run(ifm)
+    conv = _conv_oracle(ifm, wts, b, 1, 1)
+    e, f = conv.shape[:2]
+    want = conv.reshape(e // 2, 2, f // 2, 2, m).max(axis=(1, 3))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(6, 12),
+    c=st.integers(1, 4),
+    m=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_conv_property_random_shapes(h, c, m, seed):
+    w, k, stride, pad = h + 2, 3, 1, 1
+    ifm = _int_data(seed, (h, w, c))
+    wts = _int_data(seed + 1, (k, k, c, m))
+    b = _int_data(seed + 2, (m,))
+    sched = compile_conv_block("r", h, w, c, m, k, stride, pad)
+    got = BlockSimulator(sched, wts, bias=b).run(ifm)
+    np.testing.assert_array_equal(got, _conv_oracle(ifm, wts, b, stride, pad))
+
+
+def test_counters_match_analytic_counts():
+    """The closed-form traffic counts used by the energy model must equal
+    what the instruction-driven simulation actually does."""
+    h = w = 8
+    c, m, k = 2, 3, 3
+    sched = compile_conv_block("e", h, w, c, m, k, 1, 1)
+    sim = BlockSimulator(sched, _int_data(0, (k, k, c, m)), bias=np.zeros(m))
+    sim.run(_int_data(1, (h, w, c)))
+    e = f = 8
+    # within-group chain hops: (K-1) per group per output, K groups
+    assert sim.counters.chain_hops == e * f * k * (k - 1)
+    # group-sum hops: tiles_per_row per boundary, (K-1) boundaries
+    assert sim.counters.group_hops == e * f * (k - 1) * k
+    assert sim.counters.buf_push == sim.counters.buf_pop == e * f * (k - 1)
+    assert sim.counters.act_ops == e * f * m
+
+
+# ---------------------------------------------------------------------------
+# FC dataflow (Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c_in,c_out,n_c,n_m", [
+    (600, 300, 256, 128),
+    (512, 512, 256, 256),
+    (100, 10, 256, 256),   # single tile
+    (1000, 257, 256, 64),
+])
+def test_fc_on_the_move_matches_oracle(c_in, c_out, n_c, n_m):
+    x = _int_data(4, (c_in,))
+    w = _int_data(5, (c_in, c_out))
+    cnt = SimCounters()
+    got = simulate_fc(x, w, n_c, n_m, counters=cnt)
+    np.testing.assert_array_equal(got, x @ w)
+    assert cnt.macs == c_in * c_out

@@ -1,0 +1,181 @@
+"""Kernel vs oracle: shape sweeps + circuit-equivalence property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cim import (
+    CIMSpec,
+    calibrate_gain,
+    cim_matmul,
+    cim_linear_reference,
+    quantize_symmetric,
+)
+from repro.kernels.cim_matmul import cim_matmul_pallas
+from repro.kernels.ref import (
+    cim_matmul_bitplane_ref,
+    cim_matmul_ref,
+    int8_matmul_exact_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand_int8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, dtype=jnp.int8)
+
+
+SHAPES = [
+    (8, 256, 16),
+    (16, 256, 128),
+    (32, 512, 64),
+    (128, 1024, 256),
+    (1, 300, 7),      # ragged: K not a multiple of n_c, tiny N
+    (65, 700, 130),   # everything ragged
+    (256, 2048, 512),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_pallas_matches_ref(m, k, n):
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (m, k))
+    wq = _rand_int8(k2, (k, n))
+    spec = CIMSpec(n_c=256, adc_bits=8, gain=16.0)
+    ref = cim_matmul_ref(xq, wq, spec)
+    out = cim_matmul_pallas(xq, wq, spec, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 128), (64, 128), (256, 256), (512, 512)])
+def test_pallas_block_shapes(block_m, block_n):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (96, 768))
+    wq = _rand_int8(k2, (768, 192))
+    spec = CIMSpec()
+    ref = cim_matmul_ref(xq, wq, spec)
+    out = cim_matmul_pallas(xq, wq, spec, block_m=block_m, block_n=block_n,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n_c", [64, 128, 256, 512])
+@pytest.mark.parametrize("adc_bits", [6, 8, 12])
+def test_pallas_spec_sweep(n_c, adc_bits):
+    key = jax.random.PRNGKey(n_c + adc_bits)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (32, 2 * n_c + 17))
+    wq = _rand_int8(k2, (2 * n_c + 17, 96))
+    spec = CIMSpec(n_c=n_c, adc_bits=adc_bits, gain=8.0)
+    ref = cim_matmul_ref(xq, wq, spec)
+    out = cim_matmul_pallas(xq, wq, spec, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_jnp_fast_path_matches_ref():
+    """core.cim.cim_matmul (the layer fast path) == kernel oracle."""
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (24, 600))
+    wq = _rand_int8(k2, (600, 48))
+    spec = CIMSpec()
+    np.testing.assert_array_equal(
+        np.asarray(cim_matmul(xq, wq, spec)),
+        np.asarray(cim_matmul_ref(xq, wq, spec)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Circuit-level equivalence: bit planes + mirrors + 16:1 charge share ==
+# exact int dot (then ADC).  This is the paper's §4.5 numerics.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(1, 8),
+    subs=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitplane_circuit_equivalence(m, n, subs, seed):
+    spec = CIMSpec(n_c=32, adc_bits=8, gain=4.0)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    k_dim = subs * spec.n_c
+    xq = _rand_int8(k1, (m, k_dim))
+    wq = _rand_int8(k2, (k_dim, n))
+    a = cim_matmul_bitplane_ref(xq, wq, spec)
+    b = cim_matmul_ref(xq, wq, spec)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lossless_adc_recovers_exact_matmul(seed):
+    """With adc_step <= 1 the pipeline must equal the exact int8 matmul."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (4, 64))
+    wq = _rand_int8(k2, (64, 4))
+    # n_c=64: full_scale = 64*127*127; make ADC wide enough to be lossless
+    spec = CIMSpec(n_c=64, adc_bits=22, gain=1.0)
+    assert spec.lossless
+    got = cim_matmul_ref(xq, wq, spec)
+    want = int8_matmul_exact_ref(xq, wq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), gain=st.floats(1.0, 64.0))
+def test_adc_codes_bounded(seed, gain):
+    """Property: every accumulated output is bounded by n_sub * q_max * step."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (8, 512))
+    wq = _rand_int8(k2, (512, 8))
+    spec = CIMSpec(n_c=128, adc_bits=8, gain=gain)
+    out = np.asarray(cim_matmul_ref(xq, wq, spec))
+    n_sub = 512 // 128
+    bound = n_sub * (spec.q_max + 1) * spec.adc_step
+    assert np.all(np.abs(out) <= bound + 1e-3)
+
+
+def test_cim_linear_accuracy():
+    """End-to-end float linear through CIM keeps reasonable fidelity when
+    the gain is calibrated (the paper's accuracy rows: ~1-2% drop)."""
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (64, 512), jnp.float32)
+    w = jax.random.normal(k2, (512, 256), jnp.float32) / 512**0.5
+    want = x @ w
+
+    def rel_err(adc_bits):
+        spec = CIMSpec(n_c=256, adc_bits=adc_bits)
+        g = calibrate_gain(x, w, spec)
+        spec = CIMSpec(n_c=256, adc_bits=adc_bits, gain=g)
+        got = cim_linear_reference(x, w, spec)
+        return float(
+            np.linalg.norm(np.asarray(got - want)) / np.linalg.norm(np.asarray(want))
+        )
+
+    e8, e10, e12 = rel_err(8), rel_err(10), rel_err(12)
+    # 8-bit SAR ADC (paper config): small but nonzero error — this is the
+    # accuracy drop Tab. 4 reports (VGG-11 91.51% fp -> 89.85% on Domino)
+    assert e8 < 0.03, f"8-bit relative error {e8:.4f} too high"
+    # error falls with converter resolution toward the int8-quantization
+    # floor (~1.2% on this data)
+    assert e12 <= e10 <= e8, (e8, e10, e12)
+    assert e12 < 0.015
+
+
+def test_quantize_roundtrip():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (128, 64)) * 3.0
+    q, s = quantize_symmetric(x, 8)
+    back = np.asarray(q, np.float32) * np.asarray(s)
+    rel = np.abs(back - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 1 / 100  # 8-bit: ~1/254 max relative step

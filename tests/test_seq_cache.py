@@ -1,0 +1,95 @@
+"""Sequence-sharded KV cache + LSE merge (flash-decode): when heads can't
+shard over tp, the cache shards over its *sequence* dim instead and
+partial softmax stats merge across the axis — must equal the tp=1
+reference exactly."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models.common import ShardingPlan
+from repro.runtime.serve_loop import build_serve_program
+from repro.runtime.train_loop import build_train_program
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices")
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _undividable_cfg():
+    """H=6 doesn't divide tp=4 -> replicated attention + seq-cache."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    return dataclasses.replace(
+        cfg, attention=dataclasses.replace(
+            cfg.attention, num_heads=6, num_kv_heads=2))
+
+
+def test_seq_cache_engages(mesh):
+    cfg = _undividable_cfg()
+    pcfg = ParallelConfig(reduction="ring", seq_sharded_cache=True)
+    prog = build_serve_program(cfg, mesh, pcfg, batch=4, s_max=32)
+    assert not prog.plan.attn_sharded and prog.plan.seq_cache
+    # cache sequence dim is sharded over the model axis
+    leaves = jax.tree.leaves(
+        prog.cache_specs, is_leaf=lambda s: hasattr(s, "index") or
+        "PartitionSpec" in str(type(s)))
+    assert any("model" in str(s) for s in leaves)
+
+
+def test_seq_cache_decode_matches_tp1(mesh):
+    cfg = _undividable_cfg()
+    pcfg = ParallelConfig(reduction="ring", seq_sharded_cache=True)
+    b, s = 4, 24
+    prog = build_serve_program(cfg, mesh, pcfg, batch=b, s_max=s + 8)
+    tprog = build_train_program(cfg, mesh, pcfg, TrainConfig())
+    params, _ = tprog.init_fn(0)
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (b, s + 2), 0, cfg.vocab_size)
+
+    logits, caches = jax.jit(prog.prefill_fn)(
+        params, {"tokens": tokens[:, :s]})
+    l1, caches = jax.jit(prog.decode_fn)(
+        params, tokens[:, s], caches, jnp.int32(s))
+    l2, caches = jax.jit(prog.decode_fn)(
+        params, tokens[:, s + 1], caches, jnp.int32(s + 1))
+
+    # tp=1 reference on the same global params
+    host = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)), params)
+    plan1 = ShardingPlan.for_model(cfg, tp=1)
+    rl, rc = T.prefill(host, tokens[:, :s], cfg, plan1, s_max=s + 8)
+    r1, rc = T.decode_step(host, tokens[:, s], rc, s, cfg, plan1)
+    r2, rc = T.decode_step(host, tokens[:, s + 1], rc, s + 1, cfg, plan1)
+    v = cfg.vocab_size
+    np.testing.assert_allclose(np.asarray(l1)[:, :v], np.asarray(r1)[:, :v],
+                               atol=3e-2, rtol=3e-2)
+    np.testing.assert_allclose(np.asarray(l2)[:, :v], np.asarray(r2)[:, :v],
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_seq_cache_int8_runs(mesh):
+    cfg = _undividable_cfg()
+    pcfg = ParallelConfig(reduction="ring", seq_sharded_cache=True)
+    b, s = 4, 16
+    prog = build_serve_program(cfg, mesh, pcfg, batch=b, s_max=s + 4,
+                               kv_dtype="int8")
+    tprog = build_train_program(cfg, mesh, pcfg, TrainConfig())
+    params, _ = tprog.init_fn(0)
+    key = jax.random.PRNGKey(4)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits, caches = jax.jit(prog.prefill_fn)(params, {"tokens": tokens})
+    l1, _ = jax.jit(prog.decode_fn)(
+        params, jnp.argmax(logits, -1).astype(jnp.int32), caches,
+        jnp.int32(s))
+    assert np.all(np.isfinite(np.asarray(l1)))

@@ -1,0 +1,77 @@
+"""ZeRO-3/FSDP param sharding: numerics must be identical (gather is
+exact), args bytes per device must shrink, grads stay correct."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.runtime.train_loop import build_train_program
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices")
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _programs(mesh, arch="minitron-8b"):
+    cfg = get_config(arch).reduced()
+    tcfg = TrainConfig(optimizer="adamw", lr=1e-3, total_steps=10)
+    base = build_train_program(
+        cfg, mesh, ParallelConfig(reduction="ring", remat="full"), tcfg)
+    z3 = build_train_program(
+        cfg, mesh, ParallelConfig(reduction="ring", remat="full",
+                                  zero3=True, zero3_min_size=1), tcfg)
+    return cfg, base, z3
+
+
+def test_zero3_step_matches_baseline(mesh):
+    cfg, base, z3 = _programs(mesh)
+    pb, sb = base.init_fn(0)
+    pz, sz = z3.init_fn(0)
+    # identical initial params (same seed & init math)
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(pb)[0]), np.asarray(jax.tree.leaves(pz)[0]))
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    pb2, sb2, mb = base.step_fn(pb, sb, batch)
+    pz2, sz2, mz = z3.step_fn(pz, sz, batch)
+    assert float(mb["loss"]) == pytest.approx(float(mz["loss"]), rel=1e-4)
+    for a, b in zip(jax.tree.leaves(pb2), jax.tree.leaves(pz2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-3, rtol=3e-2)
+
+
+def test_zero3_shards_params_over_data(mesh):
+    cfg, base, z3 = _programs(mesh)
+    assert base.param_specs != z3.param_specs
+    data_sharded = [
+        s for s in jax.tree.leaves(
+            z3.param_specs,
+            is_leaf=lambda x: "PartitionSpec" in str(type(x)))
+        if "data" in str(s)]
+    assert data_sharded, "some params must shard over the data axis"
+
+
+def test_zero3_reduces_args_bytes(mesh):
+    """Lower+compile the step for both and compare per-device argument
+    bytes: z3 must be strictly smaller."""
+    cfg, base, z3 = _programs(mesh)
+
+    def arg_bytes(prog):
+        p_sds, o_sds = jax.eval_shape(prog.init_fn, 0)
+        batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+        c = prog.step_fn.lower(p_sds, o_sds, batch).compile()
+        return c.memory_analysis().argument_size_in_bytes
+
+    assert arg_bytes(z3) < arg_bytes(base)
