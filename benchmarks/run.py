@@ -141,6 +141,66 @@ def bench_simulator():
              f"cycles~{(h+2)*(w+2)} macs={12*12*k*k*c*m}")]
 
 
+def bench_sim_batched():
+    """Batched transport: one simulated pass carries B IFMs as (B, C)
+    packet lanes; per-sample wall time must beat the B=1 loop."""
+    import numpy as np
+
+    from repro.core.schedule import compile_conv_block
+    from repro.core.simulator import BlockSimulator
+
+    h = w = 12
+    c, m, k = 4, 8, 3
+    b = 8
+    rng = np.random.default_rng(0)
+    ifms = rng.integers(-4, 5, (b, h, w, c)).astype(np.float64)
+    wts = rng.integers(-4, 5, (k, k, c, m)).astype(np.float64)
+    sched = compile_conv_block("bench", h, w, c, m, k, 1, 1)
+
+    def run_b1():
+        return BlockSimulator(sched, wts, bias=np.zeros(m)).run(ifms[0])
+
+    def run_b8():
+        return BlockSimulator(sched, wts, bias=np.zeros(m)).run(ifms)
+
+    us1, _ = _t(run_b1, reps=2)
+    us8, _ = _t(run_b8, reps=2)
+    speedup = us1 / (us8 / b)
+    return [
+        ("sim_batched_b1", us1, f"per_sample_us={us1:.1f}"),
+        ("sim_batched_b8", us8,
+         f"per_sample_us={us8 / b:.1f} speedup_per_sample={speedup:.2f}x"),
+    ]
+
+
+def bench_network_sim():
+    """Whole-network simulation: VGG-11 end-to-end from instruction
+    tables over the routed NoC, batched."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
+    from repro.core.network import NetworkSimulator
+
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {}
+    for l in cnn.layers:
+        if isinstance(l, ConvLayer):
+            params[l.name] = rng.integers(
+                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
+        else:
+            params[l.name] = rng.integers(
+                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    b = 4
+    x = rng.integers(0, 2, (b, 32, 32, 3)).astype(np.float64)
+    sim = NetworkSimulator(cnn, params)
+
+    us, res = _t(lambda: sim.run(x), reps=2)
+    return [("network_sim_vgg11_b4", us,
+             f"per_sample_us={us / b:.1f} tiles={sim.plan.total_tiles} "
+             f"chain_byte_hops={res.traffic.byte_hops['chain']}")]
+
+
 def bench_roofline_summary():
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun.json")
@@ -161,15 +221,35 @@ def bench_roofline_summary():
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_core.json", default=None,
+                    metavar="PATH",
+                    help="also write the rows as JSON (default BENCH_core.json)"
+                    )
+    args = ap.parse_args(argv)
+
+    rows = []
     print("name,us_per_call,derived")
     for fn in (bench_tab4, bench_fig7, bench_fig11, bench_fig12,
-               bench_kernels, bench_simulator, bench_roofline_summary):
+               bench_kernels, bench_simulator, bench_sim_batched,
+               bench_network_sim, bench_roofline_summary):
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 2),
+                             "derived": derived})
         except Exception as e:  # noqa: BLE001
             print(f"{fn.__name__},0,ERROR {type(e).__name__}: {e}")
+            rows.append({"name": fn.__name__, "us_per_call": 0.0,
+                         "derived": f"ERROR {type(e).__name__}: {e}"})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "core", "rows": rows}, f, indent=1)
+        print(f"# wrote {args.json} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -157,6 +157,37 @@ def build_multipliers(comps: Dict[str, Computation],
     return mult
 
 
+#: operand inside a call: optional inline shape (newer XLA prints
+#: ``dot(f32[32,128]{1,0} %convert, ...)``) + the instruction name
+_OPERAND_RE = re.compile(
+    r"(\w+\[[\d,]*\](?:\{[\d,:TS()]*\})?)?\s*%?([\w.\-]+)")
+
+
+def _call_operands(line: str, op: str) -> List[Tuple[str, str]]:
+    """(inline_shape_or_'', name) for each operand of ``op(...)``.
+
+    The operand list is extracted with paren balancing — tiled layouts
+    like ``f32[32,64]{1,0:T(8,128)}`` nest parens inside the call."""
+    m = re.search(r"\b" + re.escape(op) + r"\(", line)
+    if not m:
+        return []
+    i = j = m.end()
+    depth = 1
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return [(s, n) for s, n in _OPERAND_RE.findall(line[i:j - 1]) if n]
+
+
+def _operand_shape(operand: Tuple[str, str],
+                   shapes: Dict[str, str]) -> Optional[str]:
+    inline, name = operand
+    return inline if inline else shapes.get(name)
+
+
 def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     """2 * result_elems * contracted_size for a dot line."""
     out_m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\S+)\s+dot\(", line)
@@ -164,11 +195,11 @@ def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
         return 0.0
     out_elems, _ = _shape_elems_bytes(out_m.group(1))
     # contracted size from the lhs operand shape + contracting dims
-    ops = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+    ops = _call_operands(line, "dot")
     cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     k = 1
     if ops and cdims:
-        lhs_shape = shapes.get(ops.group(1))
+        lhs_shape = _operand_shape(ops[0], shapes)
         if lhs_shape:
             dm = _SHAPE_RE.search(lhs_shape)
             if dm:
@@ -185,10 +216,10 @@ def _conv_flops(line: str, shapes: Dict[str, str]) -> float:
     if not out_m:
         return 0.0
     out_elems, _ = _shape_elems_bytes(out_m.group(1))
-    ops = re.findall(r"convolution\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", line)
-    if not ops:
+    ops = _call_operands(line, "convolution")
+    if len(ops) < 2:
         return 0.0
-    rhs_shape = shapes.get(ops[0][1])
+    rhs_shape = _operand_shape(ops[1], shapes)
     k = 1
     if rhs_shape:
         dm = _SHAPE_RE.search(rhs_shape)

@@ -43,7 +43,9 @@ Tail = Optional[Callable[[jax.Array], jax.Array]]
 
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    from repro.compat import axis_size
+
+    return axis_size(axis)
 
 
 def _axis_index(axis: str):

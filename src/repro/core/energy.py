@@ -23,7 +23,8 @@ from typing import Dict
 
 from repro.configs.cnn import CNNConfig
 from repro.core.mapping import NetworkPlan, plan_network
-from repro.core.noc import inter_block_byte_hops
+from repro.core.noc import inter_block_byte_hops, place_network
+from repro.core.transport import CHAIN, GROUP, conv_block_byte_hops
 
 # --- Tab. 3 component energies (45 nm, 1 V) --------------------------------
 E_MAC = 48.1e-15              # J per 8b MAC in the PE (crossbar+ADC+integ.)
@@ -44,7 +45,8 @@ E_BUF_BYTE = 1.9e-12          # J per byte buffer R or W  (Tab. 3 Rifm buffer:
                               # Tab. 4 VGG-16 "on-chip memory" 446.4 uJ)
 
 STEP_CLOCK_HZ = 10e6          # instruction/step clock (Tab. 3)
-PSUM_BYTES = 2                # partial/group-sums carried at 16b
+from repro.core.transport import PSUM_BYTES  # noqa: E402  (16b psums, shared
+                                             # with the NoC transport layer)
 AREA_PER_TILE_MM2 = 0.398     # Tab. 3 "Tile total"
 
 
@@ -124,23 +126,41 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan) -> EnergyReport:
         ii_cycles=plan.initiation_interval,
     )
     rep.e_cim = plan.total_macs * E_MAC
+    placement = place_network(plan)
+    noc = placement.noc
 
-    for lp in plan.layers:
+    for li, lp in enumerate(plan.layers):
         if lp.kind == "conv":
-            # traffic counts validated against the instruction-driven
-            # simulator (tests/test_domino_core.py::test_counters...)
+            # traffic counts share the routed-link accounting of the
+            # instruction-driven simulator via core/transport.py: for any
+            # single placed chain the two are equal by construction
+            # (tests/test_transport.py cross-validates every benchmark
+            # geometry).  Here output pixels divide over all duplicated
+            # copies/m-splits, whose placed bases give each copy its own
+            # routed group-hop lengths — the functional simulator drives
+            # copy 0 only, so network-wide GROUP totals are the energy
+            # model's (all-copies) figure, not the simulator's.
             pix = lp.out_pixels
             k = lp.k
+            group_size = lp.chain_len // k
             # IFM stream: every padded pixel visits every tile of the chain
             ifm_visit_bytes = lp.in_pixels * lp.c_in * lp.chain_len
-            # chain psums: K*(K-1) hops per output, M x 16b payload
-            chain_bytes = pix * k * (k - 1) * lp.c_out * PSUM_BYTES
-            # group-sums: (K-1) tail-to-tail transfers of `chain/k` hops
-            group_bytes = pix * (k - 1) * lp.chain_len // k * lp.c_out * PSUM_BYTES
-            # c-split reduction: psum columns joined FC-style
-            split_bytes = pix * (lp.c_splits - 1) * lp.c_out * PSUM_BYTES
-            move = ifm_visit_bytes + chain_bytes + group_bytes + split_bytes
-            rep.e_moving += move * E_LINK_BYTE_HOP
+            # chain psums + group-sums, routed per placed (copy, m-split)
+            # chain over the shared mesh; output pixels divide over copies
+            fires = pix / lp.duplication
+            chain_bh = group_bh = 0.0
+            for d in range(lp.duplication):
+                for j in range(lp.m_splits):
+                    base = placement.chain_base(
+                        li, d, j, tiles_per_copy=lp.tiles_per_copy,
+                        chain_len=lp.chain_len)
+                    m_slice = min(plan.n_m, lp.c_out - j * plan.n_m)
+                    bh = conv_block_byte_hops(noc, base, k, group_size,
+                                              fires, m_slice * PSUM_BYTES)
+                    chain_bh += bh[CHAIN]
+                    group_bh += bh[GROUP]
+            rep.e_moving += (ifm_visit_bytes + chain_bh + group_bh) \
+                * E_LINK_BYTE_HOP
 
             # memory: Rifm buffer w+r per pixel visit; Rofm buffer push+pop
             # per waiting group-sum
@@ -148,8 +168,9 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan) -> EnergyReport:
             rofm_bytes = 2 * pix * (k - 1) * lp.c_out * PSUM_BYTES
             rep.e_memory += (rifm_bytes + rofm_bytes) * E_BUF_BYTE
 
-            # other: adders, activation, pooling, schedule fetch, control
-            adds = pix * (k * k - 1 + lp.c_splits - 1) * lp.c_out
+            # other: adders (one per chain link per output — channel-split
+            # chains fold their slices in-chain), activation, schedule fetch
+            adds = pix * (lp.chain_len - 1) * lp.c_out
             rep.e_other += adds * E_ADDER_8B * PSUM_BYTES
             rep.e_other += pix * lp.c_out * E_ACT_8B
             # active tile-cycles: each copy streams in_pixels/dup pixels
@@ -163,7 +184,8 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan) -> EnergyReport:
             rep.e_other += (lp.chain_len - 1) * lp.c_out * E_ADDER_8B * PSUM_BYTES
 
     # inter-block OFM movement (snake placement, usually 1 hop)
-    rep.e_moving += inter_block_byte_hops(plan) * E_LINK_BYTE_HOP
+    rep.e_moving += inter_block_byte_hops(plan, placement=placement) \
+        * E_LINK_BYTE_HOP
     return rep
 
 

@@ -1,0 +1,127 @@
+"""Whole-network Domino simulation (the tentpole of the compile ->
+place -> route -> simulate -> energy path).
+
+Chains per-layer block simulators tail-to-head on the *placed* mesh from
+``place_network``: every CONV layer runs from its compiled instruction
+tables (``core/schedule.py``) through the shared routed transport, FC
+layers run the Fig. 4 grid dataflow, and each block's OFM streams to the
+next block's head tile over its routed NoC link — so a whole
+``configs/cnn.py`` model executes end-to-end from 16-bit instruction
+words and is checked against the jax reference forward pass
+(``models/cnn.py::cnn_forward``).
+
+Batching: the IFM batch rides each routed packet as ``(B, C)`` lanes, so
+one simulated pass serves a whole batch (see ``core/simulator.py``).
+
+Functional notes:
+
+* weight-duplicated copies share weights and split the pixel stream for
+  *throughput*; functionally one copy of each block computes the full
+  OFM, which is what we simulate (copy 0's placement), while the energy
+  model accounts all copies;
+* residual networks (ResNet shortcut adds) are not wired yet —
+  ``NetworkSimulator`` raises for them; the VGG family runs end-to-end;
+* layers whose schedule period W + 2P exceeds the 128-entry table (Tab.
+  3) fail to compile, exactly like the hardware — use CIFAR-sized
+  models (e.g. ``vgg11-cifar10``) for full-network runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.cnn import CNNConfig, ConvLayer, FCLayer
+from repro.core.mapping import NetworkPlan, plan_network
+from repro.core.noc import Placement, place_network
+from repro.core.schedule import BlockSchedule, compile_conv_block
+from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
+from repro.core.transport import OFM, NoCTransport, TrafficCounters
+
+
+@dataclass
+class NetworkSimResult:
+    logits: np.ndarray            # (B, classes)
+    counters: SimCounters         # aggregated tile events, per inference
+    traffic: TrafficCounters      # routed byte-hops per traffic class
+
+
+class NetworkSimulator:
+    """Execute a whole CNN from compiled instruction tables over the
+    placed, routed NoC."""
+
+    def __init__(self, cnn: CNNConfig, params: Dict[str, np.ndarray],
+                 n_c: int = 256, n_m: int = 256, reuse: int = 1,
+                 dup_cap: int = 64):
+        """params: layer name -> (K, K, C, M) conv kernel or (C_in, C_out)
+        FC matrix (the ``models/cnn.py::init_cnn`` convention)."""
+        for layer in cnn.layers:
+            if isinstance(layer, ConvLayer) and layer.residual_from:
+                raise NotImplementedError(
+                    f"{cnn.name}: residual shortcut ({layer.name}) not "
+                    "wired into the NoC simulation yet")
+        self.cnn = cnn
+        self.params = params
+        self.n_c, self.n_m = n_c, n_m
+        self.plan: NetworkPlan = plan_network(cnn, n_c=n_c, n_m=n_m,
+                                              reuse=reuse, dup_cap=dup_cap)
+        self.placement: Placement = place_network(self.plan)
+        self.schedules: List[Optional[BlockSchedule]] = []
+        for layer, lp in zip(cnn.layers, self.plan.layers):
+            if isinstance(layer, ConvLayer):
+                self.schedules.append(compile_conv_block(
+                    layer.name, h=layer.h, w=layer.w, c_in=layer.c,
+                    c_out=layer.m, k=layer.k, stride=layer.s, pad=layer.p,
+                    pack=lp.pack, c_splits=lp.c_splits,
+                    pool_k=layer.pool_k, pool_s=layer.pool_s,
+                    activation="relu"))
+            else:
+                self.schedules.append(None)  # FC runs the Fig. 4 grid
+
+    def run(self, images: np.ndarray) -> NetworkSimResult:
+        """images: (B, H, W, 3) or (H, W, 3) -> logits (B, classes)."""
+        squeeze = images.ndim == 3
+        x = np.asarray(images, np.float64)
+        if squeeze:
+            x = x[None]
+        counters = SimCounters()
+        traffic = TrafficCounters()
+        placement = self.placement
+        noc = placement.noc
+        noc.link_traffic.clear()  # per-run link stats (hotspot metrics)
+        mesh_root = NoCTransport(noc, base=0, counters=traffic)
+        layers = list(self.cnn.layers)
+
+        for li, layer in enumerate(layers):
+            base = placement.block_start[li]
+            transport = NoCTransport(noc, base=base, counters=traffic)
+            if isinstance(layer, ConvLayer):
+                sim = BlockSimulator(
+                    self.schedules[li],
+                    np.asarray(self.params[layer.name], np.float64),
+                    bias=None, transport=transport, counters=counters)
+                x = sim.run(x)
+            else:
+                assert isinstance(layer, FCLayer)
+                if x.ndim == 4:
+                    # VGG family flattens into the first FC (ResNet's
+                    # global average pool arrives with residual wiring)
+                    x = x.reshape(x.shape[0], -1)
+                act = "relu" if li < len(layers) - 1 else None
+                x = simulate_fc(
+                    x, np.asarray(self.params[layer.name], np.float64),
+                    self.n_c, self.n_m, activation=act,
+                    counters=counters, transport=transport)
+
+            if li + 1 < len(layers):
+                # OFM tail -> next block head over the routed mesh link
+                # (same accounting as noc.inter_block_byte_hops)
+                lp = self.plan.layers[li]
+                nbytes = lp.out_pixels * lp.c_out  # 8b activations
+                mesh_root.record(placement.block_end[li],
+                                 placement.block_start[li + 1], OFM, nbytes)
+
+        return NetworkSimResult(
+            logits=x[0] if squeeze else x,
+            counters=counters, traffic=traffic)

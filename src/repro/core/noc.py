@@ -74,6 +74,13 @@ class Placement:
     block_start: Tuple[int, ...]  # first tile id of each layer block
     block_end: Tuple[int, ...]    # last tile id (the block tail)
 
+    def chain_base(self, layer: int, copy: int = 0, m_split: int = 0, *,
+                   tiles_per_copy: int, chain_len: int) -> int:
+        """First tile id of one (copy, m-split) chain inside a block:
+        copies are laid out contiguously, each holding m_splits chains."""
+        return (self.block_start[layer] + copy * tiles_per_copy
+                + m_split * chain_len)
+
 
 def place_network(plan: NetworkPlan) -> Placement:
     total = plan.total_tiles
@@ -88,10 +95,16 @@ def place_network(plan: NetworkPlan) -> Placement:
     return Placement(noc=noc, block_start=tuple(starts), block_end=tuple(ends))
 
 
-def inter_block_byte_hops(plan: NetworkPlan, bytes_per_output: int = 1) -> int:
+def inter_block_byte_hops(plan: NetworkPlan, bytes_per_output: int = 1,
+                          placement: Placement | None = None) -> int:
     """OFM bytes x hops moving from each block's tail to the next block's
-    head, with the snake placement (adjacent blocks -> 1 hop typically)."""
-    placement = place_network(plan)
+    head, with the snake placement (adjacent blocks -> 1 hop typically).
+
+    Pass an existing ``placement`` to account on a shared mesh (the
+    whole-network simulator uses this so its routed OFM counters equal
+    these analytic counts by construction)."""
+    if placement is None:
+        placement = place_network(plan)
     total = 0
     for i in range(len(plan.layers) - 1):
         src = placement.block_end[i]

@@ -83,6 +83,13 @@ class TileProgram:
     is_group_head: bool
     is_group_tail: bool
     is_block_tail: bool
+    # explicit routed destinations (local tile ids) — the transport layer
+    # resolves these to physical mesh routes; no hop math in the simulator
+    dst_east: Optional[int] = None   # chain psum target (tx E)
+    dst_south: Optional[int] = None  # group-sum target (tx S)
+    # input-channel slice handled by this tile (C > N_c split chains)
+    c_lo: int = 0
+    c_hi: Optional[int] = None       # None = full input depth
 
     def instr_at(self, phase: int) -> Instruction:
         return Instruction.decode(self.table[phase % self.period])
@@ -121,6 +128,16 @@ class BlockSchedule:
     pack: int
     tiles: Tuple[TileProgram, ...]
     tail: TailProgram
+    c_splits: int = 1
+
+    @property
+    def group_size(self) -> int:
+        """Tiles per filter-row group (tap packing x channel splits)."""
+        return math.ceil(self.k / self.pack) * self.c_splits
+
+    @property
+    def chain_len(self) -> int:
+        return len(self.tiles)
 
     @property
     def wp(self) -> int:
@@ -158,17 +175,31 @@ def compile_conv_block(
     stride: int = 1,
     pad: int = 1,
     pack: int = 1,
+    c_splits: int = 1,
     pool_k: int = 0,
     pool_s: int = 0,
     activation: Optional[str] = "relu",
 ) -> BlockSchedule:
-    """Compile one CONV layer onto a K²×1-style chain of ceil(K/pack)*K tiles.
+    """Compile one CONV layer onto a chain of ``k * group_size`` tiles,
+    ``group_size = ceil(k/pack) * c_splits``.
 
     ``pack`` taps (along the filter row) share one tile via Rifm in-buffer
-    shifting (used when N_c > C).  Period = W + 2P must fit the 128-entry
-    schedule table (Tab. 3) — checked here like a real compiler would.
+    shifting (used when N_c > C); ``c_splits`` input-channel slices extend
+    each group with split tiles chained east (used when C > N_c — every
+    tile MACs only its ``[c_lo, c_hi)`` slice of the pixel).  Period =
+    W + 2P must fit the 128-entry schedule table (Tab. 3) — checked here
+    like a real compiler would.
+
+    Every emitted :class:`TileProgram` carries its explicit destination
+    tile ids (``dst_east`` / ``dst_south``); the simulator routes packets
+    to those ids over the mesh transport layer instead of doing its own
+    hop arithmetic.
     """
     assert 1 <= pack <= k
+    assert c_splits >= 1
+    if c_splits > 1:
+        assert pack == 1, "tap packing and channel splitting are exclusive"
+        assert c_splits <= c_in
     wp = w + 2 * pad
     f_out = (w + 2 * pad - k + stride) // stride
     e_out = (h + 2 * pad - k + stride) // stride
@@ -180,96 +211,124 @@ def compile_conv_block(
         )
 
     tiles_per_row = math.ceil(k / pack)
+    group_size = tiles_per_row * c_splits
     tiles: List[TileProgram] = []
-    chain_len = k * tiles_per_row
+    chain_len = k * group_size
+    split_c = math.ceil(c_in / c_splits)
 
     for i in range(k):  # filter row == group
         for u in range(tiles_per_row):
             j0 = u * pack
             this_pack = min(pack, k - j0)
-            t = i * tiles_per_row + u
-            is_head = u == 0
-            is_tail = u == tiles_per_row - 1
-            is_block_tail = t == chain_len - 1
+            for sc in range(c_splits):
+                t = i * group_size + u * c_splits + sc
+                is_head = u == 0 and sc == 0
+                is_tail = u == tiles_per_row - 1 and sc == c_splits - 1
+                is_block_tail = t == chain_len - 1
+                c_lo = sc * split_c
+                c_hi = min(c_in, (sc + 1) * split_c)
 
-            table = [NOP] * period
-            # C-type accumulate instructions at MAC phases
-            for phase in _mac_phases(j0, this_pack, stride, f_out):
-                func = FROM_PE
-                rx = 1 << int(Port.W)  # pixels + psums arrive from the west
-                tx = 0
-                if not is_head:
-                    func |= SUM_ADD  # add the chain psum from the west queue
-                if not is_tail:
-                    tx |= 1 << int(Port.E)  # forward psum east along the row
-                else:
-                    # group tail: fold in the running group-sum from the
-                    # north (previous groups), then send south
-                    if i > 0:
-                        func |= BUF_POP
-                    if not is_block_tail:
-                        tx |= 1 << int(Port.S)
-                table[phase] = Instruction(Opcode.C, rx=rx, func=func, tx=tx)
-
-            if is_tail and i > 0:
-                # arrival phases of the running group-sum from group i-1:
-                # it arrives `stride*wp` cycles before our completion phase,
-                # i.e. at the same column phase -> BUF_PUSH rides the same
-                # slot; encode rx from N + push.
+                table = [NOP] * period
+                dst_east: Optional[int] = None
+                dst_south: Optional[int] = None
+                # C-type accumulate instructions at MAC phases
                 for phase in _mac_phases(j0, this_pack, stride, f_out):
-                    instr = Instruction.decode(table[phase].encode()) \
-                        if isinstance(table[phase], Instruction) else table[phase]
-                    table[phase] = Instruction(
-                        Opcode.C,
-                        rx=instr.rx | (1 << int(Port.N)),
-                        func=instr.func | BUF_PUSH,
-                        tx=instr.tx,
-                    )
+                    func = FROM_PE
+                    rx = 1 << int(Port.W)  # pixels + psums arrive from west
+                    tx = 0
+                    if not is_head:
+                        func |= SUM_ADD  # add the chain psum from the queue
+                    if not is_tail:
+                        tx |= 1 << int(Port.E)  # forward psum east
+                        dst_east = t + 1
+                    else:
+                        # group tail: fold in the running group-sum from the
+                        # north (previous groups), then send south
+                        if i > 0:
+                            func |= BUF_POP
+                        if not is_block_tail:
+                            tx |= 1 << int(Port.S)
+                            dst_south = t + group_size
+                    table[phase] = Instruction(Opcode.C, rx=rx, func=func, tx=tx)
 
-            tiles.append(
-                TileProgram(
-                    tile_id=t,
-                    tap_row=i,
-                    tap_col=j0,
-                    pack=this_pack,
-                    chain_pos=t,
-                    table=tuple(ins.encode() for ins in table),
-                    period=period,
-                    gate=RifmGate(tap_row=i, stride=stride, e=e_out),
-                    is_group_head=is_head,
-                    is_group_tail=is_tail,
-                    is_block_tail=is_block_tail,
+                if is_tail and i > 0:
+                    # arrival phases of the running group-sum from group i-1:
+                    # it arrives `stride*wp` cycles before our completion
+                    # phase, i.e. at the same column phase -> BUF_PUSH rides
+                    # the same slot; encode rx from N + push.
+                    for phase in _mac_phases(j0, this_pack, stride, f_out):
+                        instr = table[phase]
+                        table[phase] = Instruction(
+                            Opcode.C,
+                            rx=instr.rx | (1 << int(Port.N)),
+                            func=instr.func | BUF_PUSH,
+                            tx=instr.tx,
+                        )
+
+                tiles.append(
+                    TileProgram(
+                        tile_id=t,
+                        tap_row=i,
+                        tap_col=j0,
+                        pack=this_pack,
+                        chain_pos=t,
+                        table=tuple(ins.encode() for ins in table),
+                        period=period,
+                        gate=RifmGate(tap_row=i, stride=stride, e=e_out),
+                        is_group_head=is_head,
+                        is_group_tail=is_tail,
+                        is_block_tail=is_block_tail,
+                        dst_east=dst_east,
+                        dst_south=dst_south,
+                        c_lo=c_lo,
+                        c_hi=c_hi,
+                    )
                 )
-            )
 
     tail = compile_tail(pool_k, pool_s, activation)
     return BlockSchedule(
         layer_name=name, k=k, stride=stride, pad=pad, c_in=c_in, c_out=c_out,
-        h=h, w=w, pack=pack, tiles=tuple(tiles), tail=tail,
+        h=h, w=w, pack=pack, tiles=tuple(tiles), tail=tail, c_splits=c_splits,
     )
 
 
 def compile_tail(pool_k: int, pool_s: int,
                  activation: Optional[str]) -> TailProgram:
     """M-type table for the block tail: activation on every output, plus the
-    paper's Fig. 9 max-pool compare/store pattern (period 2*S_p events)."""
+    paper's Fig. 9 max-pool compare/store pattern (period S_p * S_p events,
+    the paper's p = 2*S_p at two events/slot).
+
+    Generalized over the pool stride (the paper evaluates K_p = S_p = 2;
+    any non-overlapping K_p == S_p >= 2 window compiles):
+
+    * ``ypar == 0``        -> POOL_STORE: latch the window-row running max;
+    * ``ypar  > 0``        -> POOL_MAX: fold the next column in;
+    * row end (``ypar == S_p-1``), non-final row -> +POOL_STORE: merge the
+      row max into the row buffer;
+    * final event of the window -> +POOL_OUT: emit the pooled result.
+    """
     act = ACT_EN if activation else 0
     if pool_s == 0:
         table = [Instruction(Opcode.M, func=act).encode()]
         return TailProgram(tuple(table), 0, 0, activation)
-    assert pool_k == pool_s == 2, "paper evaluates K_p = S_p = 2"
+    if pool_k != pool_s:
+        raise NotImplementedError(
+            f"overlapping pooling (K_p={pool_k} != S_p={pool_s}) needs more "
+            "than one pooling register (paper Fig. 9 covers K_p == S_p)")
+    assert pool_s >= 2
     table = []
     for xpar in range(pool_s):
         for ypar in range(pool_s):
             func = act
             if ypar == 0:
-                func |= POOL_STORE  # stash first column of the window
+                func |= POOL_STORE  # start this window-row's running max
             else:
-                func |= POOL_MAX  # compare with stashed value
-                if xpar == 0:
-                    func |= POOL_STORE  # row-max into the row buffer
-                else:
-                    func |= POOL_OUT  # emit pooled result
+                func |= POOL_MAX  # compare with the running row max
+                if ypar == pool_s - 1:
+                    if xpar < pool_s - 1:
+                        func |= POOL_STORE  # row max into the row buffer
+                    else:
+                        func |= POOL_OUT  # emit pooled result
             table.append(Instruction(Opcode.M, func=func).encode())
     return TailProgram(tuple(table), pool_k, pool_s, activation)
 

@@ -3,29 +3,40 @@
 Executes convolutions *strictly from compiled instruction tables*
 (``core/schedule.py``): the simulator knows nothing about convolution —
 each cycle it decodes the tile's periodic C-type instruction, applies the
-Rifm row gate, moves packets one hop per cycle, and lets the block-tail
-M-type program do activation/pooling.  Tests assert the emitted OFM
-equals ``jax.lax.conv_general_dilated`` exactly, which is the paper's
+Rifm row gate, moves packets over the routed NoC transport layer
+(``core/transport.py``), and lets the block-tail M-type program do
+activation/pooling.  Tests assert the emitted OFM equals
+``jax.lax.conv_general_dilated`` exactly, which is the paper's
 correctness claim for the "computing-on-the-move" dataflow (Figs. 5/6/9).
 
 Micro-architecture modeled per tile (paper Fig. 2):
 
 * **Rifm**: systolic pixel pipeline (1 tile/cycle) + shift buffer holding
   the last ``pack`` pixels (in-buffer shifting) + positional MAC gate;
-* **PE**: MAC over the tile's packed taps — exact fp, or the CIM pipeline
+* **PE**: MAC over the tile's packed taps (and its ``[c_lo, c_hi)``
+  channel slice for C > N_c split chains) — exact fp, or the CIM pipeline
   (``core/cim.py``) when a ``CIMSpec`` is supplied;
 * **Rofm**: W-input register queue (chain psums), the Rofm buffer
   (group-sums waiting for peers), adder, and the tail computation unit
   (activation + pooling comparator).
 
-Event counters feed the analytic energy model and are cross-validated
-against its closed-form counts in tests.
+Transport: every chain psum and group-sum is a *routed* packet — the
+tile's compiled ``dst_east``/``dst_south`` id is resolved through
+``MeshNoC.route`` by the shared :class:`NoCTransport`, which also does
+the byte-hop accounting the analytic energy model reads.  The simulator
+contains no hop arithmetic of its own.
+
+Batching: packets are ``(B, C)`` arrays — one simulated pass moves a
+whole batch of IFMs through the chain with the per-tile MAC vectorized
+over the batch (the serving direction).  Counters stay per-inference:
+a batched packet is one routed packet.
 """
 from __future__ import annotations
 
-from collections import defaultdict, deque
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -41,15 +52,18 @@ from repro.core.instructions import (
     SUM_ADD,
     Instruction,
     Opcode,
+    Port,
 )
+from repro.core.noc import MeshNoC
 from repro.core.schedule import BlockSchedule, TileProgram, compile_fc_block
+from repro.core.transport import CHAIN, GROUP, SPLIT, PSUM_BYTES, NoCTransport
 
 
 @dataclass
 class SimCounters:
     macs: int = 0
-    chain_hops: int = 0       # psum packets moving tile->tile within a group
-    group_hops: int = 0       # group-sum packets moving between group tails
+    chain_hops: int = 0       # routed hops of psum packets within a group
+    group_hops: int = 0       # routed hops of group-sum packets (tail->tail)
     buf_push: int = 0
     buf_pop: int = 0
     act_ops: int = 0
@@ -68,48 +82,72 @@ _ACT = {
 class _Tile:
     def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int):
         self.prog = prog
-        self.weights = weights  # (pack, C, M) for this tile's taps
+        self.weights = weights  # (pack, C_slice, M) for this tile's taps
         self.fifo_w: deque = deque()  # chain psums from the west
         self.fifo_n: deque = deque()  # running group-sums from the north
         self.buffer: deque = deque()  # the Rofm buffer
         self.shift_buf: deque = deque(maxlen=pack_span)  # Rifm in-buffer shift
+        # decode the periodic table once (the hardware decodes per fetch;
+        # decoding per simulated cycle only burns wall time)
+        self.decoded: Tuple[Instruction, ...] = tuple(
+            Instruction.decode(wd) for wd in prog.table
+        )
+
+
+def _standalone_transport(chain_len: int) -> NoCTransport:
+    """A lone block gets its own square mesh, snake-placed from tile 0."""
+    side = max(1, math.ceil(math.sqrt(chain_len)))
+    return NoCTransport(MeshNoC(rows=side, cols=side), base=0)
 
 
 class BlockSimulator:
-    """Simulates one compiled CONV block on one IFM."""
+    """Simulates one compiled CONV block on a (batch of) IFM(s)."""
 
     def __init__(self, sched: BlockSchedule, weights: np.ndarray,
                  bias: Optional[np.ndarray] = None,
-                 cim_spec: Optional[CIMSpec] = None):
-        """weights: (K, K, C, M) float; bias: (M,)."""
+                 cim_spec: Optional[CIMSpec] = None,
+                 transport: Optional[NoCTransport] = None,
+                 counters: Optional[SimCounters] = None):
+        """weights: (K, K, C, M) float; bias: (M,).
+
+        ``transport`` places the block on a shared mesh and ``counters``
+        aggregates events across blocks (whole-network simulation); by
+        default the block lives alone on its own mesh.
+        """
         k = sched.k
         assert weights.shape[:2] == (k, k)
         self.sched = sched
         self.bias = bias
         self.cim_spec = cim_spec
-        self.counters = SimCounters()
+        self.counters = counters if counters is not None else SimCounters()
+        self.transport = transport if transport is not None \
+            else _standalone_transport(sched.chain_len)
         self.tiles: List[_Tile] = []
         for prog in sched.tiles:
-            taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack]
+            c_hi = prog.c_hi if prog.c_hi is not None else sched.c_in
+            taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack,
+                           prog.c_lo:c_hi]
             self.tiles.append(_Tile(prog, np.asarray(taps, np.float64),
                                     pack_span=prog.pack))
-        # deliveries[(cycle, tile_id, port)] -> list of packets
-        self._deliveries: Dict[Tuple[int, int, str], List[np.ndarray]] = defaultdict(list)
+        self._psum_bytes = sched.c_out * PSUM_BYTES
         # tail pooling state
         self._pool_tmp: Optional[np.ndarray] = None
-        self._pool_row: Dict[int, np.ndarray] = {}
+        self._pool_row: dict = {}
         self._outputs: List[np.ndarray] = []
         self._pooled: List[np.ndarray] = []
 
     # -- PE ------------------------------------------------------------------
 
     def _pe_mac(self, tile: _Tile) -> np.ndarray:
-        """MAC over the packed taps against the Rifm shift buffer."""
+        """MAC over the packed taps against the Rifm shift buffer; the
+        pixel is ``(B, C)`` and the MAC is batched over B."""
         pack = tile.prog.pack
+        c_lo, c_hi = tile.prog.c_lo, tile.prog.c_hi
         pixels = list(tile.shift_buf)[-pack:]
-        acc = np.zeros(self.sched.c_out, np.float64)
+        acc = np.zeros((pixels[0].shape[0], self.sched.c_out), np.float64)
         for d, px in enumerate(pixels):
-            w_tap = tile.weights[d]  # (C, M)
+            w_tap = tile.weights[d]  # (C_slice, M)
+            px = px[:, c_lo:c_hi]
             if self.cim_spec is None:
                 acc += px @ w_tap
             else:
@@ -117,94 +155,101 @@ class BlockSimulator:
                 import jax.numpy as jnp
                 acc += np.asarray(
                     cim_linear_reference(
-                        jnp.asarray(px[None, :], jnp.float32),
+                        jnp.asarray(px, jnp.float32),
                         jnp.asarray(w_tap, jnp.float32),
                         self.cim_spec,
                     )
-                )[0].astype(np.float64)
-            self.counters.macs += px.shape[0] * w_tap.shape[1]
+                ).astype(np.float64)
+            self.counters.macs += px.shape[1] * w_tap.shape[1]
         return acc
 
     # -- main loop -------------------------------------------------------------
 
     def run(self, ifm: np.ndarray) -> np.ndarray:
-        """ifm: (H, W, C) -> OFM (E, F, M) after activation (+pooling)."""
+        """ifm: (H, W, C) or (B, H, W, C) -> OFM (..., E, F, M) after
+        activation (+pooling); the batch axis is preserved if given."""
         s = self.sched
-        assert ifm.shape == (s.h, s.w, s.c_in)
-        padded = np.zeros((s.hp, s.wp, s.c_in), np.float64)
-        padded[s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
-        stream = padded.reshape(-1, s.c_in)  # raster order
-        n_pix = stream.shape[0]
+        squeeze = ifm.ndim == 3
+        if squeeze:
+            ifm = ifm[None]
+        b = ifm.shape[0]
+        assert ifm.shape[1:] == (s.h, s.w, s.c_in), ifm.shape
+        padded = np.zeros((b, s.hp, s.wp, s.c_in), np.float64)
+        padded[:, s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
+        stream = padded.reshape(b, -1, s.c_in)  # raster order, batched
+        n_pix = stream.shape[1]
         chain = len(self.tiles)
-        tiles_per_row = chain // s.k
         total_cycles = n_pix + chain + chain  # drain margin
+        transport = self.transport
+        counters = self.counters
+        self._outputs.clear()
+        self._pooled.clear()
 
         for cyc in range(total_cycles):
-            self.counters.cycles += 1
-            # deliver packets scheduled for this cycle
+            counters.cycles += 1
+            # deliver packets routed to arrive this cycle
             for tid, tile in enumerate(self.tiles):
-                for port, fifo in (("W", tile.fifo_w), ("N", tile.fifo_n)):
-                    key = (cyc, tid, port)
-                    if key in self._deliveries:
-                        fifo.extend(self._deliveries.pop(key))
+                tile.fifo_w.extend(transport.deliver(cyc, tid, "W"))
+                tile.fifo_n.extend(transport.deliver(cyc, tid, "N"))
 
             for tid, tile in enumerate(self.tiles):
                 q = cyc - tid  # pixel index currently at this tile
                 if not (0 <= q < n_pix):
                     continue
                 r, c = divmod(q, s.wp)
-                tile.shift_buf.append(stream[q])  # Rifm pipeline latch
+                px = stream[:, q]
+                tile.shift_buf.append(px)  # Rifm pipeline latch
                 if c == 0:
                     # row restart: in-buffer shift state resets with the row
                     tile.shift_buf.clear()
-                    tile.shift_buf.append(stream[q])
+                    tile.shift_buf.append(px)
 
-                instr = tile.prog.instr_at(c)
-                self.counters.instr_fetches += 1
+                instr = tile.decoded[c % tile.prog.period]
+                counters.instr_fetches += 1
                 if instr.is_nop:
                     continue
 
                 gate = tile.prog.gate.row_active(r)
-                acc = np.zeros(s.c_out, np.float64)
-                produced = False
+                acc = None
+                prog = tile.prog
 
                 if instr.has(BUF_PUSH) and tile.fifo_n:
                     tile.buffer.append(tile.fifo_n.popleft())
-                    self.counters.buf_push += 1
+                    counters.buf_push += 1
 
                 if gate:
                     if instr.has(FROM_PE):
-                        acc += self._pe_mac(tile)
-                        produced = True
+                        acc = self._pe_mac(tile)
                     if instr.has(SUM_ADD) and tile.fifo_w:
-                        acc += tile.fifo_w.popleft()
-                        produced = True
+                        west = tile.fifo_w.popleft()
+                        acc = west if acc is None else acc + west
                     if instr.has(BUF_POP) and tile.buffer:
-                        acc += tile.buffer.popleft()
-                        self.counters.buf_pop += 1
-                        produced = True
+                        head = tile.buffer.popleft()
+                        counters.buf_pop += 1
+                        acc = head if acc is None else acc + head
 
-                if not produced:
+                if acc is None:
                     continue
 
-                from repro.core.instructions import Port as _P
-
-                if instr.tx_to(_P.E):
-                    self._deliveries[(cyc + 1, tid + 1, "W")].append(acc)
-                    self.counters.chain_hops += 1
-                elif instr.tx_to(_P.S):
-                    nxt = tid + tiles_per_row  # next group tail
-                    hops = tiles_per_row
-                    self._deliveries[(cyc + hops, nxt, "N")].append(acc)
-                    self.counters.group_hops += hops
-                elif tile.prog.is_block_tail:
+                if instr.tx_to(Port.E):
+                    hops = transport.send(cyc, tid, prog.dst_east, "W", acc,
+                                          CHAIN, self._psum_bytes) - cyc
+                    counters.chain_hops += hops
+                elif instr.tx_to(Port.S):
+                    hops = transport.send(cyc, tid, prog.dst_south, "N", acc,
+                                          GROUP, self._psum_bytes) - cyc
+                    counters.group_hops += hops
+                elif prog.is_block_tail:
                     self._emit(acc)
 
-        out = np.stack(self._outputs).reshape(s.e, s.f, s.c_out)
+        out = np.stack(self._outputs, axis=1).reshape(b, s.e, s.f, s.c_out)
         if self.sched.tail.pool_s:
-            ep, fp = s.e // self.sched.tail.pool_s, s.f // self.sched.tail.pool_s
-            return np.stack(self._pooled).reshape(ep, fp, s.c_out)
-        return out
+            ps = self.sched.tail.pool_s
+            assert s.e % ps == 0 and s.f % ps == 0, (
+                f"pooling {ps} does not tile the {s.e}x{s.f} OFM")
+            out = np.stack(self._pooled, axis=1).reshape(
+                b, s.e // ps, s.f // ps, s.c_out)
+        return out[0] if squeeze else out
 
     # -- tail unit (M-type program) --------------------------------------------
 
@@ -218,24 +263,30 @@ class BlockSimulator:
             val = val + self.bias
         if instr.has(ACT_EN):
             val = _ACT[s.tail.activation](val)
-            self.counters.act_ops += val.shape[0]
+            self.counters.act_ops += val.shape[-1]
         self._outputs.append(val)
         if s.tail.pool_s:
             self._pool_step(instr, x, y, val)
 
     def _pool_step(self, instr: Instruction, x: int, y: int,
                    val: np.ndarray) -> None:
-        """Fig. 9(c): compare-on-the-move max pooling in the tail Rofm."""
+        """Fig. 9(c): compare-on-the-move max pooling in the tail Rofm,
+        generalized to the schedule's actual pool stride (K_p == S_p)."""
+        ps = self.sched.tail.pool_s
         if instr.has(POOL_STORE) and not instr.has(POOL_MAX):
-            self._pool_tmp = val  # first column of the window
+            self._pool_tmp = val  # start of a window row
             return
         if instr.has(POOL_MAX):
-            self.counters.pool_ops += val.shape[0]
-            rowmax = np.maximum(self._pool_tmp, val)
+            self.counters.pool_ops += val.shape[-1]
+            self._pool_tmp = np.maximum(self._pool_tmp, val)  # running max
+            col = y // ps  # pooled-output column this window lands in
             if instr.has(POOL_STORE):
-                self._pool_row[y // 2] = rowmax  # stash row maximum
-            if instr.has(POOL_OUT):
-                self._pooled.append(np.maximum(self._pool_row[y // 2], rowmax))
+                prev = self._pool_row.get(col)
+                self._pool_row[col] = self._pool_tmp if prev is None \
+                    else np.maximum(prev, self._pool_tmp)
+            elif instr.has(POOL_OUT):
+                self._pooled.append(
+                    np.maximum(self._pool_row.pop(col), self._pool_tmp))
 
 
 # ---------------------------------------------------------------------------
@@ -245,32 +296,45 @@ class BlockSimulator:
 
 def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
                 activation: Optional[str] = None,
-                counters: Optional[SimCounters] = None) -> np.ndarray:
+                counters: Optional[SimCounters] = None,
+                transport: Optional[NoCTransport] = None) -> np.ndarray:
     """Partitioned MVM on an m_t x m_a tile grid, psums added down columns.
 
-    x: (c_in,), w: (c_in, c_out).  Driven by compile_fc_block tables.
+    x: (c_in,) or (B, c_in); w: (c_in, c_out).  Driven by compile_fc_block
+    tables; column-chain psum traffic is routed/accounted through
+    ``transport`` when the grid is placed on a shared mesh.
     """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
     c_in, c_out = w.shape
     m_t, m_a, tables = compile_fc_block("fc", c_in, c_out, n_c, n_m, activation)
     cnt = counters if counters is not None else SimCounters()
-    out = np.zeros(c_out, np.float64)
+    out = np.zeros((x.shape[0], c_out), np.float64)
     for j in range(m_a):  # columns compute in parallel; python loop for sim
         n0, n1 = j * n_m, min((j + 1) * n_m, c_out)
-        psum = np.zeros(n1 - n0, np.float64)
+        psum = np.zeros((x.shape[0], n1 - n0), np.float64)
         for i in range(m_t):
             instr = Instruction.decode(tables[i][j][0])
             k0, k1 = i * n_c, min((i + 1) * n_c, c_in)
-            acc = np.zeros(n1 - n0, np.float64)
+            acc = np.zeros((x.shape[0], n1 - n0), np.float64)
             if instr.has(FROM_PE):
-                acc += x[k0:k1] @ w[k0:k1, n0:n1]
+                acc += x[:, k0:k1] @ w[k0:k1, n0:n1]
                 cnt.macs += (k1 - k0) * (n1 - n0)
             if instr.has(SUM_ADD) and i > 0:
                 acc += psum
             psum = acc
             if i < m_t - 1:
-                cnt.chain_hops += 1
+                # grid tile (i, j) -> (i+1, j): column-major placement puts
+                # them m_a tiles apart in the snake chain
+                if transport is not None:
+                    src, dst = i * m_a + j, (i + 1) * m_a + j
+                    cnt.chain_hops += transport.record(
+                        src, dst, SPLIT, (n1 - n0) * PSUM_BYTES)
+                else:
+                    cnt.chain_hops += 1
             if instr.has(ACT_EN):
                 psum = _ACT[activation or "identity"](psum)
-                cnt.act_ops += psum.shape[0]
-        out[n0:n1] = psum
-    return out
+                cnt.act_ops += psum.shape[-1]
+        out[:, n0:n1] = psum
+    return out[0] if squeeze else out

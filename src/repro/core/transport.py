@@ -1,0 +1,157 @@
+"""Unified NoC transport layer (the paper's §3 mesh fabric, shared by the
+cycle-level simulator and the analytic energy model).
+
+Every packet the Domino dataflow moves — chain psums hopping east along a
+group, group-sums travelling south between group tails, FC-split psums,
+and inter-block OFM streams — is delivered through :class:`NoCTransport`,
+which resolves the physical route via :meth:`MeshNoC.route` and accounts
+byte-hops per traffic class.  The analytic side
+(:func:`conv_block_traffic`) walks the *same* link list through the *same*
+``MeshNoC`` hop function, so for any placed chain the simulator's
+counters equal the energy model's counts **by construction** —
+cross-validated for every benchmark geometry in
+``tests/test_transport.py``.  (Network-wide, the energy model spreads
+output pixels over all weight-duplicated copies at their own placed
+bases, while the functional simulator drives copy 0 — CHAIN and OFM
+totals still agree exactly because those links are snake-adjacent;
+routed GROUP totals differ by the copies' differing bases.)
+
+Payloads are ``(B, C)`` arrays: one routed packet carries the whole batch
+lane-parallel (the serving direction), so hop/byte counters are
+*per-inference* regardless of batch size.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.noc import MeshNoC
+
+#: partial/group-sums are carried at 16b on the Domino NoC (Tab. 3)
+PSUM_BYTES = 2
+
+# traffic classes (the IFM pixel stream is accounted analytically in
+# core/energy.py — every padded pixel makes one hop per chain tile)
+CHAIN = "chain"    # psum tile -> next tile within a group (east)
+GROUP = "group"    # group-sum tail -> next group tail (south)
+SPLIT = "split"    # FC-grid psum columns (Fig. 4)
+OFM = "ofm"        # block tail -> next block head (inter-layer stream)
+
+
+@dataclass
+class TrafficCounters:
+    """Per-class routed-traffic totals (all integers, per inference)."""
+
+    byte_hops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    packets: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    hops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    def add(self, kind: str, hops: int, nbytes: int) -> None:
+        self.packets[kind] += 1
+        self.hops[kind] += hops
+        self.byte_hops[kind] += hops * nbytes
+
+
+class NoCTransport:
+    """Routed, latency-accurate packet delivery for one placed block.
+
+    ``base`` maps the block's local tile ids onto the global mesh; several
+    transports may share one :class:`MeshNoC` and one
+    :class:`TrafficCounters` (whole-network simulation) while keeping
+    private mailboxes.
+    """
+
+    def __init__(self, noc: MeshNoC, base: int = 0,
+                 counters: Optional[TrafficCounters] = None):
+        self.noc = noc
+        self.base = base
+        self.counters = counters if counters is not None else TrafficCounters()
+        # (cycle, local_dst, port) -> payload list, FIFO per link
+        self._mail: Dict[Tuple[int, int, str], List[Any]] = defaultdict(list)
+
+    def hops(self, src: int, dst: int) -> int:
+        """Physical route length between two *local* tile ids."""
+        return self.noc.hops(self.base + src, self.base + dst)
+
+    def send(self, cycle: int, src: int, dst: int, port: str, payload: Any,
+             kind: str, nbytes: int) -> int:
+        """Route a packet; returns its arrival cycle (1 cycle / hop).
+
+        The XY route over the snake-placed mesh is never longer than the
+        logical chain distance (each snake step is one physical hop), so
+        arrivals never miss their schedule-table rendezvous slot.
+        """
+        h = self.hops(src, dst)
+        self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
+        self.counters.add(kind, h, nbytes)
+        arrival = cycle + max(1, h)
+        self._mail[(arrival, dst, port)].append(payload)
+        return arrival
+
+    def record(self, src: int, dst: int, kind: str, nbytes: int) -> int:
+        """Account a routed bulk transfer without mailbox delivery (used
+        for OFM/IFM streams between sequentially simulated blocks).
+        Returns the route length."""
+        h = self.hops(src, dst)
+        self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
+        self.counters.add(kind, h, nbytes)
+        return h
+
+    def deliver(self, cycle: int, dst: int, port: str) -> Iterator[Any]:
+        """Pop every packet arriving at (dst, port) this cycle."""
+        key = (cycle, dst, port)
+        if key in self._mail:
+            yield from self._mail.pop(key)
+
+
+# ---------------------------------------------------------------------------
+# Analytic traffic (the energy model's side of the by-construction equality)
+# ---------------------------------------------------------------------------
+
+
+def conv_links(k: int, group_size: int) -> List[Tuple[int, int, str]]:
+    """Logical link list of a compiled conv chain: ``k`` groups of
+    ``group_size`` tiles; psums hop east within a group, the group tail
+    forwards the running group-sum south to the next tail."""
+    links: List[Tuple[int, int, str]] = []
+    chain = k * group_size
+    for t in range(chain):
+        if (t + 1) % group_size != 0:
+            links.append((t, t + 1, CHAIN))
+        elif t != chain - 1:
+            links.append((t, t + group_size, GROUP))
+    return links
+
+
+def conv_block_traffic(noc: MeshNoC, base: int, k: int, group_size: int,
+                       fires: int, payload_bytes: int) -> TrafficCounters:
+    """Analytic routed traffic of one placed conv chain.
+
+    Every link carries one ``payload_bytes`` packet per output pixel
+    (``fires`` = E*F), routed over the same mesh the simulator uses.
+    """
+    cnt = TrafficCounters()
+    for src, dst, kind in conv_links(k, group_size):
+        h = noc.hops(base + src, base + dst)
+        cnt.packets[kind] += fires
+        cnt.hops[kind] += fires * h
+        cnt.byte_hops[kind] += fires * h * payload_bytes
+    return cnt
+
+
+def conv_block_byte_hops(noc: MeshNoC, base: int, k: int, group_size: int,
+                         fires: float, payload_bytes: float
+                         ) -> Dict[str, float]:
+    """Float variant for the energy model (fires may be fractional when
+    output pixels are spread over weight-duplicated copies).
+
+    Chain links join consecutive snake-placed tiles, which are physically
+    adjacent by construction (``MeshNoC.coord`` snake order), so only the
+    (k-1) group links need an actual route lookup.
+    """
+    out = {CHAIN: 0.0, GROUP: 0.0}
+    for src, dst, kind in conv_links(k, group_size):
+        h = 1 if kind == CHAIN else noc.hops(base + src, base + dst)
+        out[kind] += fires * h * payload_bytes
+    return out

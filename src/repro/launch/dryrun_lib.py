@@ -91,7 +91,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *,
     if shape.kind == "train":
         tcfg = train_config_for(cfg)
         prog = build_train_program(cfg, mesh, pcfg, tcfg)
-        p_sds, o_sds = jax.eval_shape(prog.init_fn, 0)
+        from repro.runtime.train_loop import program_arg_sds
+        p_sds, o_sds = program_arg_sds(prog)
         batch_sds = train_input_specs(cfg, shape)
         lowered = prog.step_fn.lower(p_sds, o_sds, batch_sds)
     else:

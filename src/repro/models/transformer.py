@@ -360,13 +360,15 @@ def _chunked_xent(h_gathered, labels, w, cfg, plan, xent_chunk: int):
         logits = _mask_pad_vocab(logits, cfg, plan, v_local)
         loss = sharded_softmax_xent(logits, jnp.maximum(lc, 0), xent_plan,
                                     valid=vm)
-        cnt = jnp.sum(vm.astype(jnp.float32))
-        return acc[0] + loss * cnt, acc[1] + cnt
+        # rank-1 (not scalar) accumulators: scalar loop residuals break
+        # shard_map's transpose on the jax 0.4.x line (promote-residual bug)
+        cnt = jnp.sum(vm.astype(jnp.float32)).reshape(1)
+        return acc[0] + loss.reshape(1) * cnt, acc[1] + cnt
 
     total, count = lax.fori_loop(
         0, n_chunks, chunk_loss,
-        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)))
-    return total / jnp.maximum(count, 1.0)
+        (jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32)))
+    return (total / jnp.maximum(count, 1.0))[0]
 
 
 def lm_loss(params, batch, cfg: ModelConfig, plan: ShardingPlan,

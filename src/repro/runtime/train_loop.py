@@ -45,12 +45,9 @@ def make_plan(cfg: ModelConfig, mesh, pcfg: ParallelConfig) -> ShardingPlan:
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
-    try:
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # older keyword
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
+    from repro.compat import shard_map
+
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 @dataclass
@@ -87,6 +84,25 @@ def _batch_pspec(batch_tree: Dict[str, Any], plan: ShardingPlan,
             dp_size is None or v.shape[0] % dp_size == 0)
         out[k] = P(dp if use_dp else None, *([None] * (v.ndim - 1)))
     return out
+
+
+def program_arg_sds(prog: "TrainProgram"):
+    """(param, opt) ShapeDtypeStructs with shardings attached.
+
+    Older jax drops shardings in ``eval_shape``, and lowering ``step_fn``
+    from unsharded abstract args breaks donation aliasing (donated input
+    shards must match output shards byte-for-byte)."""
+    from jax.sharding import NamedSharding
+
+    p_sds, o_sds = jax.eval_shape(prog.init_fn, 0)
+
+    def shard(sds, spec):
+        spec = spec if isinstance(spec, P) else P()
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(prog.mesh, spec))
+
+    return (jax.tree.map(shard, p_sds, prog.param_specs),
+            jax.tree.map(shard, o_sds, prog.opt_specs))
 
 
 def dp_size_of(mesh, plan: ShardingPlan) -> int:
@@ -197,11 +213,19 @@ def build_train_program(cfg: ModelConfig, mesh, pcfg: ParallelConfig,
 
     @functools.partial(jax.jit,
                        out_shardings=(param_shardings, opt_shardings))
-    def init_fn(seed):
+    def _init_jit(seed):
         params = init_fn_model(jax.random.PRNGKey(seed), cfg,
                                plan.as_global())
         state = opt.init_opt_state(params, tcfg, pcfg.grad_compression)
         return params, state
+
+    def init_fn(seed):
+        # sharding-invariant RNG: ZeRO-3-sharded init must equal the
+        # replicated baseline bit-for-bit (see compat.partitionable_rng)
+        from repro.compat import partitionable_rng
+
+        with partitionable_rng():
+            return _init_jit(seed)
 
     # --- loss: shard_map over the mesh ---
     from repro.models.common import Zero3

@@ -39,8 +39,10 @@ def _data(seed=0):
 
 
 def _shmap(mesh, fn, in_specs, out_specs):
+    from repro.compat import shard_map
+
     return jax.jit(
-        jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     )
 
 

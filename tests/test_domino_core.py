@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.instructions import (
     ACT_EN,
@@ -29,14 +28,12 @@ from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    opc=st.sampled_from([Opcode.C, Opcode.M]),
-    rx=st.integers(0, 31),
-    func=st.integers(0, 63),
-    tx=st.integers(0, 15),
-)
+@pytest.mark.parametrize("opc", [Opcode.C, Opcode.M])
+@pytest.mark.parametrize("rx,func,tx", [
+    (0, 0, 0), (31, 63, 15), (5, 17, 3), (16, 32, 8), (1, 1, 1),
+])
 def test_instruction_roundtrip(opc, rx, func, tx):
+    # randomized sweep lives in test_property.py (hypothesis-gated)
     ins = Instruction(opc, rx=rx, func=func, tx=tx)
     word = ins.encode()
     assert 0 <= word < 2 ** 16  # 16-bit ISA (Tab. 2)
@@ -159,14 +156,11 @@ def test_conv_with_maxpool_matches_oracle():
     np.testing.assert_array_equal(got, want)
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    h=st.integers(6, 12),
-    c=st.integers(1, 4),
-    m=st.integers(1, 4),
-    seed=st.integers(0, 1000),
-)
-def test_conv_property_random_shapes(h, c, m, seed):
+@pytest.mark.parametrize("h,c,m,seed", [
+    (6, 1, 4, 0), (7, 3, 2, 17), (9, 4, 4, 101), (12, 2, 1, 999),
+])
+def test_conv_fixed_random_shapes(h, c, m, seed):
+    # hypothesis-driven version lives in test_property.py
     w, k, stride, pad = h + 2, 3, 1, 1
     ifm = _int_data(seed, (h, w, c))
     wts = _int_data(seed + 1, (k, k, c, m))

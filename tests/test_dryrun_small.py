@@ -7,6 +7,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import pytest
 
+# Lower+compile cells for several archs (~1.5 min).
+pytestmark = pytest.mark.slow
+
 import repro.configs.base as CB
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig

@@ -69,8 +69,10 @@ def test_collective_in_scan_wire_bytes(mesh):
         out, _ = jax.lax.scan(body, x, None, length=7)
         return out
 
-    sm = jax.shard_map(cc, mesh=mesh, in_specs=P(None, "model"),
-                       out_specs=P(None, "model"), check_vma=False)
+    from repro.compat import shard_map
+
+    sm = shard_map(cc, mesh=mesh, in_specs=P(None, "model"),
+                   out_specs=P(None, "model"))
     c = jax.jit(sm).lower(
         jax.ShapeDtypeStruct((16, 64), jnp.float32)).compile()
     st = analyze_hlo(c.as_text(), 4)

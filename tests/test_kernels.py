@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cim import (
     CIMSpec,
@@ -88,60 +87,8 @@ def test_jnp_fast_path_matches_ref():
     )
 
 
-# ---------------------------------------------------------------------------
-# Circuit-level equivalence: bit planes + mirrors + 16:1 charge share ==
-# exact int dot (then ADC).  This is the paper's §4.5 numerics.
-# ---------------------------------------------------------------------------
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    m=st.integers(1, 8),
-    n=st.integers(1, 8),
-    subs=st.integers(1, 3),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_bitplane_circuit_equivalence(m, n, subs, seed):
-    spec = CIMSpec(n_c=32, adc_bits=8, gain=4.0)
-    key = jax.random.PRNGKey(seed)
-    k1, k2 = jax.random.split(key)
-    k_dim = subs * spec.n_c
-    xq = _rand_int8(k1, (m, k_dim))
-    wq = _rand_int8(k2, (k_dim, n))
-    a = cim_matmul_bitplane_ref(xq, wq, spec)
-    b = cim_matmul_ref(xq, wq, spec)
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_lossless_adc_recovers_exact_matmul(seed):
-    """With adc_step <= 1 the pipeline must equal the exact int8 matmul."""
-    key = jax.random.PRNGKey(seed)
-    k1, k2 = jax.random.split(key)
-    xq = _rand_int8(k1, (4, 64))
-    wq = _rand_int8(k2, (64, 4))
-    # n_c=64: full_scale = 64*127*127; make ADC wide enough to be lossless
-    spec = CIMSpec(n_c=64, adc_bits=22, gain=1.0)
-    assert spec.lossless
-    got = cim_matmul_ref(xq, wq, spec)
-    want = int8_matmul_exact_ref(xq, wq)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
-
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), gain=st.floats(1.0, 64.0))
-def test_adc_codes_bounded(seed, gain):
-    """Property: every accumulated output is bounded by n_sub * q_max * step."""
-    key = jax.random.PRNGKey(seed)
-    k1, k2 = jax.random.split(key)
-    xq = _rand_int8(k1, (8, 512))
-    wq = _rand_int8(k2, (512, 8))
-    spec = CIMSpec(n_c=128, adc_bits=8, gain=gain)
-    out = np.asarray(cim_matmul_ref(xq, wq, spec))
-    n_sub = 512 // 128
-    bound = n_sub * (spec.q_max + 1) * spec.adc_step
-    assert np.all(np.abs(out) <= bound + 1e-3)
+# Circuit-level equivalence property tests (paper §4.5 numerics) live in
+# test_property.py behind the optional hypothesis dependency.
 
 
 def test_cim_linear_accuracy():

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Full-architecture forward/backward sweeps (~2.5 min).
+pytestmark = pytest.mark.slow
+
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.configs.cnn import CNN_BENCHMARKS
 from repro.models import encdec as ED

@@ -8,6 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# MoE SPMD training tests are the slowest in the suite (~9 min).
+pytestmark = pytest.mark.slow
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -1,0 +1,100 @@
+"""Whole-network simulation: a full CNN_BENCHMARKS model executes
+end-to-end from compiled instruction tables over the placed, routed NoC
+and matches the jax reference forward pass exactly; routed CHAIN and
+OFM traffic counters match the analytic NoC/energy counts exactly
+(GROUP totals are per-copy placement-dependent — the functional sim
+drives copy 0 while the energy model accounts all duplicated copies;
+per-chain GROUP equality is covered in test_transport.py)."""
+import numpy as np
+import pytest
+
+from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
+from repro.core.network import NetworkSimulator
+from repro.core.noc import inter_block_byte_hops
+from repro.core.transport import CHAIN, OFM, PSUM_BYTES
+
+
+def _int_params(cnn, rng):
+    """Small integer weights keep every intermediate exactly representable
+    in float64 through the whole network (sim vs jax bitwise-comparable)."""
+    params = {}
+    for l in cnn.layers:
+        if isinstance(l, ConvLayer):
+            params[l.name] = rng.integers(
+                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
+        else:
+            params[l.name] = rng.integers(
+                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    return params
+
+
+def _jax_reference(cnn, params, x):
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.models.cnn import cnn_forward
+
+    with enable_x64():
+        p64 = {k: jnp.asarray(v, jnp.float64) for k, v in params.items()}
+        return np.asarray(cnn_forward(p64, jnp.asarray(x, jnp.float64), cnn))
+
+
+@pytest.fixture(scope="module")
+def vgg11_run():
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _int_params(cnn, rng)
+    x = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+    sim = NetworkSimulator(cnn, params)
+    res = sim.run(x)
+    return cnn, params, x, sim, res
+
+
+def test_vgg11_matches_jax_reference_exactly(vgg11_run):
+    cnn, params, x, sim, res = vgg11_run
+    ref = _jax_reference(cnn, params, x)
+    assert res.logits.shape == ref.shape == (2, 10)
+    np.testing.assert_array_equal(res.logits, ref)
+
+
+def test_vgg11_ofm_traffic_matches_analytic(vgg11_run):
+    """OFM tail->head streams are accounted through the same placement +
+    route as noc.inter_block_byte_hops — equal by construction."""
+    _, _, _, sim, res = vgg11_run
+    assert res.traffic.byte_hops[OFM] == inter_block_byte_hops(sim.plan)
+
+
+def test_vgg11_chain_traffic_matches_energy_model(vgg11_run):
+    """Chain psum byte-hops summed over the network equal the energy
+    model's per-layer counts (chain links are snake-adjacent: 1 hop)."""
+    _, _, _, sim, res = vgg11_run
+    expect = 0
+    for lp in sim.plan.layers:
+        if lp.kind != "conv":
+            continue
+        group_size = lp.chain_len // lp.k
+        expect += (lp.out_pixels * lp.k * (group_size - 1)
+                   * lp.c_out * PSUM_BYTES)
+    assert res.traffic.byte_hops[CHAIN] == expect
+
+
+def test_vgg11_batched_matches_single(vgg11_run):
+    cnn, params, x, sim, res = vgg11_run
+    for i in range(x.shape[0]):
+        single = NetworkSimulator(cnn, params).run(x[i])
+        np.testing.assert_array_equal(res.logits[i], single.logits)
+
+
+def test_resnet_rejected_until_residuals_wired():
+    cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
+    rng = np.random.default_rng(1)
+    with pytest.raises(NotImplementedError):
+        NetworkSimulator(cnn, _int_params(cnn, rng))
+
+
+def test_imagenet_width_rejected_like_hardware():
+    """224-wide layers exceed the 128-entry schedule table (Tab. 3)."""
+    cnn = CNN_BENCHMARKS["vgg16-imagenet"]()
+    rng = np.random.default_rng(2)
+    with pytest.raises(ValueError):
+        NetworkSimulator(cnn, _int_params(cnn, rng))

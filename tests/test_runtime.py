@@ -15,6 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Multi-device train/serve loop tests (~1.5 min).
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig, TrainConfig
 from repro.data.pipeline import DataSpec, synthetic_batch

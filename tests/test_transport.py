@@ -1,0 +1,205 @@
+"""NoC transport layer: the simulator's routed counters must equal the
+analytic counts the energy model uses — by construction — plus batched
+(B=8) simulation bitwise-equals the B=1 loop, and the generalized pool
+stride is exact (regression for the old hard-coded ``y // 2``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
+from repro.core.mapping import plan_network
+from repro.core.noc import MeshNoC
+from repro.core.schedule import compile_conv_block
+from repro.core.simulator import BlockSimulator
+from repro.core.transport import (
+    CHAIN,
+    GROUP,
+    PSUM_BYTES,
+    NoCTransport,
+    TrafficCounters,
+    conv_block_byte_hops,
+    conv_block_traffic,
+    conv_links,
+)
+
+
+def _int_data(key, shape, lo=-4, hi=5):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(key), shape, lo, hi), np.float64
+    )
+
+
+def _conv_oracle(ifm, w, b, stride, pad, relu=True):
+    out = jax.lax.conv_general_dilated(
+        jnp.asarray(ifm, jnp.float64)[None],
+        jnp.asarray(w, jnp.float64),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    out = out + jnp.asarray(b, jnp.float64)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Link lists
+# ---------------------------------------------------------------------------
+
+
+def test_conv_links_shape():
+    # k groups of group_size tiles: group_size-1 chain links per group,
+    # k-1 group links
+    for k, gs in [(3, 3), (3, 6), (5, 5), (1, 1), (3, 1)]:
+        links = conv_links(k, gs)
+        chain = [l for l in links if l[2] == CHAIN]
+        group = [l for l in links if l[2] == GROUP]
+        assert len(chain) == k * (gs - 1)
+        assert len(group) == k - 1
+        for src, dst, _ in chain:
+            assert dst == src + 1
+        for src, dst, _ in group:
+            assert dst == src + gs
+
+
+def test_routed_group_hops_never_exceed_logical():
+    """XY routes over the snake mesh are never longer than the chain
+    distance — the schedule-table rendezvous slots rely on this."""
+    noc = MeshNoC(6, 6)
+    for gs in (2, 3, 4, 5):
+        for t in range(36 - gs):
+            assert noc.hops(t, t + gs) <= gs
+
+
+# ---------------------------------------------------------------------------
+# Simulated counters == analytic counts, for every CNN benchmark config
+# ---------------------------------------------------------------------------
+
+
+def _proxy_geometries():
+    """One shrunk-but-geometry-faithful proxy per distinct conv shape
+    (k, stride, pad, pack, c_splits) appearing in any benchmark plan."""
+    seen = {}
+    for name, fn in CNN_BENCHMARKS.items():
+        cnn = fn()
+        plan = plan_network(cnn)
+        for layer, lp in zip(cnn.layers, plan.layers):
+            if not isinstance(layer, ConvLayer):
+                continue
+            sig = (layer.k, layer.s, layer.p, lp.pack, lp.c_splits)
+            seen.setdefault(sig, name)
+    return sorted((sig, name) for sig, name in seen.items())
+
+
+@pytest.mark.parametrize("sig,config", _proxy_geometries())
+def test_sim_counters_equal_analytic_all_configs(sig, config):
+    k, stride, pad, pack, c_splits = sig
+    c_in = max(2 * c_splits, pack)  # keep every split tile non-empty
+    c_out, h = 3, 8
+    w = h + 1
+    ifm = _int_data(k + stride, (h, w, c_in))
+    wts = _int_data(2 * k, (k, k, c_in, c_out))
+    sched = compile_conv_block(f"proxy-{config}", h, w, c_in, c_out, k,
+                               stride, pad, pack=pack, c_splits=c_splits)
+    sim = BlockSimulator(sched, wts, bias=np.zeros(c_out))
+    out = sim.run(ifm)
+    np.testing.assert_array_equal(
+        out, _conv_oracle(ifm, wts, np.zeros(c_out), stride, pad))
+
+    fires = sched.e * sched.f
+    ana = conv_block_traffic(sim.transport.noc, 0, k, sched.group_size,
+                             fires, c_out * PSUM_BYTES)
+    got = sim.transport.counters
+    assert got.byte_hops[CHAIN] == ana.byte_hops[CHAIN]
+    assert got.byte_hops[GROUP] == ana.byte_hops[GROUP]
+    assert got.packets[CHAIN] == ana.packets[CHAIN]
+    assert got.packets[GROUP] == ana.packets[GROUP]
+    assert sim.counters.chain_hops == ana.hops[CHAIN]
+    assert sim.counters.group_hops == ana.hops[GROUP]
+    # the float variant the energy model calls agrees with the int one
+    bh = conv_block_byte_hops(sim.transport.noc, 0, k, sched.group_size,
+                              fires, c_out * PSUM_BYTES)
+    assert bh[CHAIN] == got.byte_hops[CHAIN]
+    assert bh[GROUP] == got.byte_hops[GROUP]
+
+
+def test_shared_mesh_placement_changes_routes_not_results():
+    """The same block placed mid-mesh routes differently (shorter group
+    hops are legal — packets wait in FIFO order) but computes the same
+    OFM, and its counters still match the analytic counts for *that*
+    placement."""
+    h = w = 8
+    c, m, k = 2, 3, 3
+    ifm = _int_data(1, (h, w, c))
+    wts = _int_data(2, (k, k, c, m))
+    sched = compile_conv_block("placed", h, w, c, m, k, 1, 1)
+    want = _conv_oracle(ifm, wts, np.zeros(m), 1, 1)
+
+    big = MeshNoC(8, 8)
+    for base in (0, 5, 17, 40):
+        tr = NoCTransport(big, base=base, counters=TrafficCounters())
+        sim = BlockSimulator(sched, wts, bias=np.zeros(m), transport=tr)
+        np.testing.assert_array_equal(sim.run(ifm), want)
+        ana = conv_block_traffic(big, base, k, sched.group_size,
+                                 sched.e * sched.f, m * PSUM_BYTES)
+        assert tr.counters.byte_hops[CHAIN] == ana.byte_hops[CHAIN]
+        assert tr.counters.byte_hops[GROUP] == ana.byte_hops[GROUP]
+
+
+# ---------------------------------------------------------------------------
+# Batched transport
+# ---------------------------------------------------------------------------
+
+
+def test_batched_simulation_bitwise_equals_b1_loop():
+    h = w = 8
+    c, m, k = 3, 4, 3
+    wts = _int_data(11, (k, k, c, m))
+    bias = _int_data(12, (m,))
+    ifms = _int_data(13, (8, h, w, c))
+    sched = compile_conv_block("b8", h, w, c, m, k, 1, 1, pool_k=2, pool_s=2)
+    batched = BlockSimulator(sched, wts, bias=bias).run(ifms)
+    for i in range(8):
+        one = BlockSimulator(sched, wts, bias=bias).run(ifms[i])
+        np.testing.assert_array_equal(batched[i], one)
+
+
+def test_batched_counters_are_per_inference():
+    """A batched packet is one routed packet: counters don't scale with B."""
+    h = w = 8
+    c, m, k = 2, 3, 3
+    wts = _int_data(3, (k, k, c, m))
+    sched = compile_conv_block("cnt", h, w, c, m, k, 1, 1)
+    sim1 = BlockSimulator(sched, wts, bias=np.zeros(m))
+    sim1.run(_int_data(4, (1, h, w, c)))
+    sim8 = BlockSimulator(sched, wts, bias=np.zeros(m))
+    sim8.run(np.repeat(_int_data(4, (1, h, w, c)), 8, axis=0))
+    assert sim1.counters.macs == sim8.counters.macs
+    assert sim1.transport.counters.byte_hops == sim8.transport.counters.byte_hops
+
+
+# ---------------------------------------------------------------------------
+# Generalized pool stride (regression: _pool_step assumed pool_s == 2)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pool,hw", [(2, 8), (3, 9), (4, 8)])
+def test_pool_stride_generalized(pool, hw):
+    h = w = hw
+    c, m, k = 2, 3, 3
+    ifm = _int_data(7 + pool, (h, w, c))
+    wts = _int_data(8 + pool, (k, k, c, m))
+    sched = compile_conv_block("p", h, w, c, m, k, 1, 1,
+                               pool_k=pool, pool_s=pool)
+    got = BlockSimulator(sched, wts, bias=np.zeros(m)).run(ifm)
+    conv = _conv_oracle(ifm, wts, np.zeros(m), 1, 1)
+    e, f = conv.shape[:2]
+    want = conv.reshape(e // pool, pool, f // pool, pool, m).max(axis=(1, 3))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_overlapping_pool_rejected_loudly():
+    with pytest.raises(NotImplementedError):
+        compile_conv_block("bad", 8, 8, 2, 3, 3, 1, 1, pool_k=3, pool_s=2)

@@ -68,7 +68,9 @@ def test_zero3_reduces_args_bytes(mesh):
     cfg, base, z3 = _programs(mesh)
 
     def arg_bytes(prog):
-        p_sds, o_sds = jax.eval_shape(prog.init_fn, 0)
+        from repro.runtime.train_loop import program_arg_sds
+
+        p_sds, o_sds = program_arg_sds(prog)
         batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
         c = prog.step_fn.lower(p_sds, o_sds, batch).compile()
