@@ -173,16 +173,11 @@ def bench_sim_batched():
     ]
 
 
-def bench_network_sim():
-    """Whole-network simulation: VGG-11 end-to-end from instruction
-    tables over the routed NoC, batched."""
+def _bench_params(cnn, rng):
     import numpy as np
 
-    from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
-    from repro.core.network import NetworkSimulator
+    from repro.configs.cnn import ConvLayer
 
-    rng = np.random.default_rng(0)
-    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
     params = {}
     for l in cnn.layers:
         if isinstance(l, ConvLayer):
@@ -191,14 +186,82 @@ def bench_network_sim():
         else:
             params[l.name] = rng.integers(
                 -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    return params
+
+
+def bench_network_sim():
+    """Whole-network simulation: VGG-11 end-to-end from instruction
+    tables over the routed NoC, batched — per-cycle interpreter vs the
+    trace-compiled fast path (bitwise-equal) vs its jitted flavor."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.network import NetworkSimulator
+
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _bench_params(cnn, rng)
     b = 4
     x = rng.integers(0, 2, (b, 32, 32, 3)).astype(np.float64)
-    sim = NetworkSimulator(cnn, params)
 
+    sim = NetworkSimulator(cnn, params)
     us, res = _t(lambda: sim.run(x), reps=2)
-    return [("network_sim_vgg11_b4", us,
+    rows = [("network_sim_vgg11_b4", us,
              f"per_sample_us={us / b:.1f} tiles={sim.plan.total_tiles} "
              f"chain_byte_hops={res.traffic.byte_hops['chain']}")]
+
+    tr = NetworkSimulator(cnn, params, backend="trace")
+    us_t, res_t = _t(lambda: tr.run(x), reps=3)
+    exact = bool(np.array_equal(res.logits, res_t.logits)
+                 and res.counters == res_t.counters)
+    rows.append((
+        "network_sim_vgg11_b4_trace", us_t,
+        f"per_sample_us={us_t / b:.1f} speedup_vs_interp={us / us_t:.1f}x "
+        f"bitwise_vs_interp={exact}"))
+
+    # the jit flavor earns its keep at serving batch sizes (float32,
+    # one im2col gemm per tile group — allclose, not bitwise)
+    b_j = 64
+    xj = rng.integers(0, 2, (b_j, 32, 32, 3)).astype(np.float64)
+    jit = NetworkSimulator(cnn, params, backend="trace", trace_jit=True)
+    us_j, _ = _t(lambda: jit.run(xj), reps=2)
+    rows.append((
+        f"network_sim_vgg11_b{b_j}_trace_jit", us_j,
+        f"per_sample_us={us_j / b_j:.1f} "
+        f"speedup_vs_interp={(us / b) / (us_j / b_j):.1f}x"))
+    return rows
+
+
+def bench_network_sim_resnet():
+    """ResNet-18 (CIFAR) end-to-end on the trace backend: residual
+    shortcuts wired through the routed mesh, checked against the jax
+    reference forward (interpreter equivalence is a slow test)."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.network import NetworkSimulator
+
+    rng = np.random.default_rng(1)
+    cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
+    params = _bench_params(cnn, rng)
+    b = 4
+    x = rng.integers(0, 2, (b, 32, 32, 3)).astype(np.float64)
+    sim = NetworkSimulator(cnn, params, backend="trace")
+    us, res = _t(lambda: sim.run(x), reps=2)
+
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.models.cnn import cnn_forward
+
+    with enable_x64():
+        p64 = {k: jnp.asarray(v, jnp.float64) for k, v in params.items()}
+        ref = np.asarray(cnn_forward(p64, jnp.asarray(x, jnp.float64), cnn))
+    match = bool(np.allclose(res.logits, ref, rtol=1e-9))
+    return [("network_sim_resnet18", us,
+             f"per_sample_us={us / b:.1f} tiles={sim.plan.total_tiles} "
+             f"match_jax={match} "
+             f"residual_byte_hops={res.traffic.byte_hops['residual']}")]
 
 
 def bench_roofline_summary():
@@ -221,6 +284,63 @@ def bench_roofline_summary():
     return rows
 
 
+#: benchmark functions whose rows are wall-time sensitive — the
+#: regression gate re-runs exactly these and compares per-row
+SIM_BENCHES = ("bench_simulator", "bench_sim_batched", "bench_network_sim",
+               "bench_network_sim_resnet")
+
+#: >1.5x per-sample slowdown vs the committed baseline fails CI
+REGRESS_THRESHOLD = 1.5
+
+
+def check_regress(baseline_path: str = "BENCH_core.json",
+                  threshold: float = REGRESS_THRESHOLD) -> int:
+    """Re-run the ``sim_*`` / ``network_sim_*`` benchmarks and compare
+    against the committed baseline JSON; returns a non-zero exit code on
+    any >``threshold``x slowdown (new rows and rows the baseline lacks
+    are informational only).
+
+    Each bench runs twice and the per-row *minimum* is compared —
+    wall-clock on a small shared CI box jitters by tens of percent, and
+    the regression gate must flag code, not scheduler noise."""
+    if not os.path.exists(baseline_path):
+        print(f"check-regress: baseline {baseline_path} not found")
+        return 2
+    with open(baseline_path) as f:
+        baseline = {r["name"]: r["us_per_call"]
+                    for r in json.load(f)["rows"]}
+    benches = [globals()[name] for name in SIM_BENCHES]
+    fresh = {}
+    for fn in benches:
+        for _ in range(2):
+            for name, us, _d in fn():
+                fresh[name] = min(us, fresh.get(name, float("inf")))
+    failures = []
+    print(f"name,baseline_us,fresh_us,ratio (threshold {threshold}x)")
+    for name, us in fresh.items():
+        base = baseline.get(name)
+        if not base:
+            print(f"{name},-,{us:.1f},new")
+            continue
+        ratio = us / base
+        verdict = "FAIL" if ratio > threshold else "ok"
+        print(f"{name},{base:.1f},{us:.1f},{ratio:.2f}x {verdict}")
+        if ratio > threshold:
+            failures.append((name, ratio))
+    # a gated row that vanished (renamed / bench dropped) is a failure
+    # too — otherwise the gate silently stops covering it
+    for name in baseline:
+        if name.startswith(("sim_", "network_sim_")) and name not in fresh:
+            print(f"{name},{baseline[name]:.1f},-,missing FAIL")
+            failures.append((name, float("inf")))
+    if failures:
+        worst = ", ".join(f"{n} {r:.2f}x" for n, r in failures)
+        print(f"check-regress: FAIL — {worst}")
+        return 1
+    print("check-regress: ok")
+    return 0
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -229,13 +349,22 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help="also write the rows as JSON (default BENCH_core.json)"
                     )
+    ap.add_argument("--check-regress", nargs="?", const="BENCH_core.json",
+                    default=None, metavar="BASELINE",
+                    help="re-run sim_*/network_sim_* rows and fail on a "
+                         f">{REGRESS_THRESHOLD}x slowdown vs the committed "
+                         "baseline JSON")
     args = ap.parse_args(argv)
+
+    if args.check_regress:
+        raise SystemExit(check_regress(args.check_regress))
 
     rows = []
     print("name,us_per_call,derived")
     for fn in (bench_tab4, bench_fig7, bench_fig11, bench_fig12,
                bench_kernels, bench_simulator, bench_sim_batched,
-               bench_network_sim, bench_roofline_summary):
+               bench_network_sim, bench_network_sim_resnet,
+               bench_roofline_summary):
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")

@@ -59,8 +59,10 @@ def main():
     print(f"dense vs 8-bit CIM: logits corr={corr:.4f}, "
           f"top-1 agreement={agree*100:.0f}%")
 
-    # 5) whole-network cycle simulation: the full VGG-11 executes from
-    # compiled 16-bit instruction tables over the routed NoC, batched
+    # 5) whole-network simulation: the full VGG-11 executes from
+    # compiled 16-bit instruction tables over the routed NoC, batched —
+    # on the trace-compiled fast path (bitwise-equal to the per-cycle
+    # interpreter; pass backend="interp" to watch the oracle instead)
     from repro.core.network import NetworkSimulator
 
     rng = np.random.default_rng(0)
@@ -69,7 +71,7 @@ def main():
         for k, v in params.items()
     }
     xb = rng.integers(0, 2, (4, 32, 32, 3)).astype(np.float64)
-    res = NetworkSimulator(cnn, int_params).run(xb)
+    res = NetworkSimulator(cnn, int_params, backend="trace").run(xb)
     ref = np.asarray(cnn_forward(
         {k: jnp.asarray(v, jnp.float32) for k, v in int_params.items()},
         jnp.asarray(xb, jnp.float32), cnn))

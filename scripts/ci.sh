@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# CI gate: fast test subset + simulator perf-regression check.
+#
+#   scripts/ci.sh            # what CI runs
+#
+# The slow suites (multi-device SPMD training, whole-ResNet interp
+# equivalence) stay out of the gate; run the full tier-1 sweep with
+# `PYTHONPATH=src python -m pytest -x -q` before release.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q -m "not slow"
+python -m benchmarks.run --check-regress

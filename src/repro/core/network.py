@@ -10,6 +10,21 @@ next block's head tile over its routed NoC link — so a whole
 words and is checked against the jax reference forward pass
 (``models/cnn.py::cnn_forward``).
 
+Two execution backends share the placement, schedules and transport:
+
+* ``backend="interp"`` — the per-cycle interpreter
+  (``core/simulator.py``), the oracle: every (tile, cycle) event is
+  decoded and executed literally;
+* ``backend="trace"`` — the trace-compiled fast path
+  (``core/trace.py``): each block's schedule is lowered once to
+  gather/gemm form and executed as a handful of batched ops, bitwise-
+  equal to the interpreter (``tests/test_trace.py``).  It removes the
+  cycle loop entirely; what remains is the conv arithmetic, so the
+  measured gain is gemm-bound (3.5x on the 2-core CI box, more on
+  wider machines — see README "Simulator backends").  ``trace_jit=True``
+  additionally routes the math through ``jax.jit`` (float32, allclose
+  not bitwise; 8.9x at serving batch sizes on the same box).
+
 Batching: the IFM batch rides each routed packet as ``(B, C)`` lanes, so
 one simulated pass serves a whole batch (see ``core/simulator.py``).
 
@@ -19,8 +34,14 @@ Functional notes:
   *throughput*; functionally one copy of each block computes the full
   OFM, which is what we simulate (copy 0's placement), while the energy
   model accounts all copies;
-* residual networks (ResNet shortcut adds) are not wired yet —
-  ``NetworkSimulator`` raises for them; the VGG family runs end-to-end;
+* residual networks are wired: a ``residual_from`` layer's block runs
+  with a bare tail (no activation), the saved block input — through the
+  ``*_sc`` projection block when the config has one — streams to the add
+  site as ``RESIDUAL``-class routed traffic, and the tail unit applies
+  ReLU after the add (``resnet18-cifar10`` matches the jax forward
+  exactly);
+* ResNet's global average pool before the FC head is computed at the FC
+  block boundary (the jax reference's ``jnp.mean``), VGG flattens;
 * layers whose schedule period W + 2P exceeds the 128-entry table (Tab.
   3) fail to compile, exactly like the hardware — use CIFAR-sized
   models (e.g. ``vgg11-cifar10``) for full-network runs.
@@ -37,7 +58,15 @@ from repro.core.mapping import NetworkPlan, plan_network
 from repro.core.noc import Placement, place_network
 from repro.core.schedule import BlockSchedule, compile_conv_block
 from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
-from repro.core.transport import OFM, NoCTransport, TrafficCounters
+from repro.core.trace import TracePlan, TraceExecutor, compile_trace
+from repro.core.transport import (
+    OFM,
+    RESIDUAL,
+    NoCTransport,
+    TrafficCounters,
+)
+
+BACKENDS = ("interp", "trace")
 
 
 @dataclass
@@ -47,37 +76,111 @@ class NetworkSimResult:
     traffic: TrafficCounters      # routed byte-hops per traffic class
 
 
+def _is_shortcut(layer) -> bool:
+    """The config convention for ResNet projection shortcuts."""
+    return isinstance(layer, ConvLayer) and layer.name.endswith("_sc")
+
+
 class NetworkSimulator:
     """Execute a whole CNN from compiled instruction tables over the
     placed, routed NoC."""
 
     def __init__(self, cnn: CNNConfig, params: Dict[str, np.ndarray],
                  n_c: int = 256, n_m: int = 256, reuse: int = 1,
-                 dup_cap: int = 64):
+                 dup_cap: int = 64, backend: str = "interp",
+                 trace_jit: bool = False):
         """params: layer name -> (K, K, C, M) conv kernel or (C_in, C_out)
         FC matrix (the ``models/cnn.py::init_cnn`` convention)."""
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
+        if trace_jit and backend != "trace":
+            raise ValueError(
+                "trace_jit=True requires backend='trace' (the default "
+                "backend is the per-cycle interpreter)")
+        # residual wiring follows the configs/cnn.py naming convention the
+        # jax reference uses (save at `*_a`, add at `residual_from`,
+        # project through an immediately-following `*_sc`) — reject
+        # anything else loudly instead of silently mis-wiring a stale
+        # shortcut or diverging from cnn_forward
+        last_save: Optional[str] = None
+        prev: Optional[ConvLayer] = None
         for layer in cnn.layers:
-            if isinstance(layer, ConvLayer) and layer.residual_from:
+            if not isinstance(layer, ConvLayer):
+                prev = None
+                continue
+            if layer.name.endswith("_a"):
+                last_save = layer.name
+            if layer.residual_from is not None:
+                if layer.residual_from != last_save:
+                    raise NotImplementedError(
+                        f"{cnn.name}: {layer.name} takes its shortcut from "
+                        f"{layer.residual_from!r}, but the most recent saved "
+                        f"block input is {last_save!r} — only the *_a/"
+                        "residual_from/*_sc convention is wired")
+                if layer.pool_s:
+                    raise NotImplementedError(
+                        f"{cnn.name}: {layer.name} pools in the same block "
+                        "as a shortcut add — the reference pools after the "
+                        "post-add ReLU, which is not wired")
+            if _is_shortcut(layer) and (
+                    prev is None or prev.residual_from is None):
                 raise NotImplementedError(
-                    f"{cnn.name}: residual shortcut ({layer.name}) not "
-                    "wired into the NoC simulation yet")
+                    f"{cnn.name}: {layer.name} is a projection shortcut "
+                    "but does not immediately follow its residual-target "
+                    "layer, so it would run inline on the main path")
+            prev = layer
         self.cnn = cnn
         self.params = params
         self.n_c, self.n_m = n_c, n_m
+        self.backend = backend
+        self.trace_jit = trace_jit
         self.plan: NetworkPlan = plan_network(cnn, n_c=n_c, n_m=n_m,
                                               reuse=reuse, dup_cap=dup_cap)
         self.placement: Placement = place_network(self.plan)
         self.schedules: List[Optional[BlockSchedule]] = []
         for layer, lp in zip(cnn.layers, self.plan.layers):
             if isinstance(layer, ConvLayer):
+                # residual targets and projection shortcuts compile with a
+                # bare tail: activation fires *after* the shortcut add
+                act = None if (layer.residual_from or _is_shortcut(layer)) \
+                    else "relu"
                 self.schedules.append(compile_conv_block(
                     layer.name, h=layer.h, w=layer.w, c_in=layer.c,
                     c_out=layer.m, k=layer.k, stride=layer.s, pad=layer.p,
                     pack=lp.pack, c_splits=lp.c_splits,
                     pool_k=layer.pool_k, pool_s=layer.pool_s,
-                    activation="relu"))
+                    activation=act))
             else:
                 self.schedules.append(None)  # FC runs the Fig. 4 grid
+        # trace backend: lower every schedule once; executors are
+        # stateless and reused across runs (keeps jitted fns warm too)
+        self._trace_plans: Dict[int, TracePlan] = {}
+        self._executors: Dict[int, TraceExecutor] = {}
+        if backend == "trace":
+            for li, sched in enumerate(self.schedules):
+                if sched is not None:
+                    self._trace_plans[li] = compile_trace(sched)
+
+    def _block(self, li: int, transport: NoCTransport,
+               counters: SimCounters):
+        """A per-layer block engine on the chosen backend."""
+        layer = self.cnn.layers[li]
+        if self.backend == "interp":
+            return BlockSimulator(
+                self.schedules[li],
+                np.asarray(self.params[layer.name], np.float64),
+                bias=None, transport=transport, counters=counters)
+        ex = self._executors.get(li)
+        if ex is None:
+            ex = TraceExecutor(
+                self.schedules[li],
+                np.asarray(self.params[layer.name], np.float64),
+                bias=None, transport=transport, counters=counters,
+                plan=self._trace_plans[li], use_jax=self.trace_jit)
+            self._executors[li] = ex
+        else:
+            ex.transport, ex.counters = transport, counters
+        return ex
 
     def run(self, images: np.ndarray) -> NetworkSimResult:
         """images: (B, H, W, 3) or (H, W, 3) -> logits (B, classes)."""
@@ -93,35 +196,84 @@ class NetworkSimulator:
         mesh_root = NoCTransport(noc, base=0, counters=traffic)
         layers = list(self.cnn.layers)
 
-        for li, layer in enumerate(layers):
-            base = placement.block_start[li]
-            transport = NoCTransport(noc, base=base, counters=traffic)
+        block_in: Optional[np.ndarray] = None  # residual save (Fig. 2 SC)
+        block_in_src: Optional[int] = None     # layer idx that produced it
+        prev_src: Optional[int] = None         # layer idx that produced x
+        li = 0
+        while li < len(layers):
+            layer = layers[li]
+            transport = NoCTransport(noc, base=placement.block_start[li],
+                                     counters=traffic)
+            step = 1
             if isinstance(layer, ConvLayer):
-                sim = BlockSimulator(
-                    self.schedules[li],
-                    np.asarray(self.params[layer.name], np.float64),
-                    bias=None, transport=transport, counters=counters)
-                x = sim.run(x)
+                if layer.name.endswith("_a"):
+                    block_in, block_in_src = x, prev_src
+                y = self._block(li, transport, counters).run(x)
+                if layer.residual_from is not None:
+                    nxt = layers[li + 1] if li + 1 < len(layers) else None
+                    if _is_shortcut(nxt):
+                        # projection shortcut: its own placed block,
+                        # driven by the saved block input
+                        sc_tr = NoCTransport(
+                            noc, base=placement.block_start[li + 1],
+                            counters=traffic)
+                        self._record_residual(
+                            mesh_root, block_in_src,
+                            placement.block_start[li + 1], block_in)
+                        shortcut = self._block(li + 1, sc_tr,
+                                               counters).run(block_in)
+                        lp = self.plan.layers[li + 1]
+                        mesh_root.record(
+                            placement.block_end[li + 1],
+                            placement.block_end[li], RESIDUAL,
+                            lp.out_pixels * lp.c_out)
+                        step = 2
+                    else:
+                        # identity shortcut streams straight to the add
+                        self._record_residual(
+                            mesh_root, block_in_src,
+                            placement.block_end[li], block_in)
+                        shortcut = block_in
+                    # tail adder + activation after the shortcut join
+                    y = y + shortcut
+                    y = np.maximum(y, 0.0)
+                    counters.act_ops += (y.shape[1] * y.shape[2]
+                                         * y.shape[3])
+                x = y
             else:
                 assert isinstance(layer, FCLayer)
                 if x.ndim == 4:
-                    # VGG family flattens into the first FC (ResNet's
-                    # global average pool arrives with residual wiring)
-                    x = x.reshape(x.shape[0], -1)
+                    if self.cnn.name.startswith("resnet"):
+                        x = x.mean(axis=(1, 2))  # global average pool
+                    else:
+                        x = x.reshape(x.shape[0], -1)  # VGG flattens
                 act = "relu" if li < len(layers) - 1 else None
                 x = simulate_fc(
                     x, np.asarray(self.params[layer.name], np.float64),
                     self.n_c, self.n_m, activation=act,
                     counters=counters, transport=transport)
 
-            if li + 1 < len(layers):
-                # OFM tail -> next block head over the routed mesh link
-                # (same accounting as noc.inter_block_byte_hops)
-                lp = self.plan.layers[li]
+            prev_src = li
+            li += step
+            if li < len(layers):
+                # OFM tail -> next consumer's head over the routed mesh
+                # link (same accounting as noc.inter_block_byte_hops)
+                lp = self.plan.layers[prev_src]
                 nbytes = lp.out_pixels * lp.c_out  # 8b activations
-                mesh_root.record(placement.block_end[li],
-                                 placement.block_start[li + 1], OFM, nbytes)
+                mesh_root.record(placement.block_end[prev_src],
+                                 placement.block_start[li], OFM, nbytes)
 
         return NetworkSimResult(
             logits=x[0] if squeeze else x,
             counters=counters, traffic=traffic)
+
+    def _record_residual(self, mesh_root: NoCTransport,
+                         src_layer: Optional[int], dst_tile: int,
+                         saved: np.ndarray) -> None:
+        """Shortcut stream: the saved block input travels from its
+        producer block's tail to the join/projection site (8b acts)."""
+        if src_layer is None:
+            return  # shortcut of the very first layer: off-chip input
+        nbytes = int(np.prod(saved.shape[1:]))
+        mesh_root.record(self.placement.block_end[src_layer], dst_tile,
+                         RESIDUAL, nbytes)

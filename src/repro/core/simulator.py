@@ -38,9 +38,10 @@ from collections import deque
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cim import CIMSpec
+from repro.core.cim import CIMSpec, cim_linear_reference
 from repro.core.instructions import (
     ACT_EN,
     BUF_POP,
@@ -80,7 +81,8 @@ _ACT = {
 
 
 class _Tile:
-    def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int):
+    def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int,
+                 c_in: int):
         self.prog = prog
         self.weights = weights  # (pack, C_slice, M) for this tile's taps
         self.fifo_w: deque = deque()  # chain psums from the west
@@ -92,6 +94,10 @@ class _Tile:
         self.decoded: Tuple[Instruction, ...] = tuple(
             Instruction.decode(wd) for wd in prog.table
         )
+        # full-depth tiles skip the per-MAC channel slice of the pixel;
+        # the weights above are already sliced at construction
+        c_hi = prog.c_hi if prog.c_hi is not None else c_in
+        self.needs_cslice = not (prog.c_lo == 0 and c_hi >= c_in)
 
 
 def _standalone_transport(chain_len: int) -> NoCTransport:
@@ -128,7 +134,7 @@ class BlockSimulator:
             taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack,
                            prog.c_lo:c_hi]
             self.tiles.append(_Tile(prog, np.asarray(taps, np.float64),
-                                    pack_span=prog.pack))
+                                    pack_span=prog.pack, c_in=sched.c_in))
         self._psum_bytes = sched.c_out * PSUM_BYTES
         # tail pooling state
         self._pool_tmp: Optional[np.ndarray] = None
@@ -140,19 +146,24 @@ class BlockSimulator:
 
     def _pe_mac(self, tile: _Tile) -> np.ndarray:
         """MAC over the packed taps against the Rifm shift buffer; the
-        pixel is ``(B, C)`` and the MAC is batched over B."""
-        pack = tile.prog.pack
+        pixel is ``(B, C)`` and the MAC is batched over B.
+
+        Hot path: the shift buffer's maxlen == pack, so its contents ARE
+        the packed-tap window (no per-call list slicing), and the pixel's
+        channel slice is skipped for full-depth tiles (the weights were
+        sliced once at construction)."""
         c_lo, c_hi = tile.prog.c_lo, tile.prog.c_hi
-        pixels = list(tile.shift_buf)[-pack:]
-        acc = np.zeros((pixels[0].shape[0], self.sched.c_out), np.float64)
-        for d, px in enumerate(pixels):
-            w_tap = tile.weights[d]  # (C_slice, M)
-            px = px[:, c_lo:c_hi]
+        weights = tile.weights
+        needs_cslice = tile.needs_cslice
+        acc = np.zeros((tile.shift_buf[0].shape[0], self.sched.c_out),
+                       np.float64)
+        for d, px in enumerate(tile.shift_buf):
+            w_tap = weights[d]  # (C_slice, M)
+            if needs_cslice:
+                px = px[:, c_lo:c_hi]
             if self.cim_spec is None:
                 acc += px @ w_tap
             else:
-                from repro.core.cim import cim_linear_reference
-                import jax.numpy as jnp
                 acc += np.asarray(
                     cim_linear_reference(
                         jnp.asarray(px, jnp.float32),

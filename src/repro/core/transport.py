@@ -37,6 +37,7 @@ CHAIN = "chain"    # psum tile -> next tile within a group (east)
 GROUP = "group"    # group-sum tail -> next group tail (south)
 SPLIT = "split"    # FC-grid psum columns (Fig. 4)
 OFM = "ofm"        # block tail -> next block head (inter-layer stream)
+RESIDUAL = "residual"  # ResNet shortcut stream (block input -> add site)
 
 
 @dataclass
@@ -47,10 +48,11 @@ class TrafficCounters:
     packets: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     hops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
 
-    def add(self, kind: str, hops: int, nbytes: int) -> None:
-        self.packets[kind] += 1
-        self.hops[kind] += hops
-        self.byte_hops[kind] += hops * nbytes
+    def add(self, kind: str, hops: int, nbytes: int, count: int = 1) -> None:
+        """Account ``count`` identical packets of ``nbytes`` over ``hops``."""
+        self.packets[kind] += count
+        self.hops[kind] += count * hops
+        self.byte_hops[kind] += count * hops * nbytes
 
 
 class NoCTransport:
@@ -96,6 +98,17 @@ class NoCTransport:
         h = self.hops(src, dst)
         self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
         self.counters.add(kind, h, nbytes)
+        return h
+
+    def record_bulk(self, src: int, dst: int, kind: str, nbytes: int,
+                    count: int) -> int:
+        """Account ``count`` identical routed packets of ``nbytes`` each in
+        one call (the trace backend's whole-block accounting).  Equivalent
+        to ``count`` :meth:`record` calls — counters and per-link traffic
+        are additive.  Returns the route length."""
+        h = self.hops(src, dst)
+        self.noc.add_traffic(self.base + src, self.base + dst, nbytes * count)
+        self.counters.add(kind, h, nbytes, count=count)
         return h
 
     def deliver(self, cycle: int, dst: int, port: str) -> Iterator[Any]:

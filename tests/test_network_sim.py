@@ -85,11 +85,19 @@ def test_vgg11_batched_matches_single(vgg11_run):
         np.testing.assert_array_equal(res.logits[i], single.logits)
 
 
-def test_resnet_rejected_until_residuals_wired():
+def test_resnet_constructs_with_residual_wiring():
+    """Residual shortcuts are wired now: the simulator builds, the
+    residual-target and ``*_sc`` blocks compile with a bare tail (the
+    ReLU fires after the shortcut add), and plain layers keep theirs.
+    End-to-end ResNet runs live in tests/test_trace.py."""
     cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
     rng = np.random.default_rng(1)
-    with pytest.raises(NotImplementedError):
-        NetworkSimulator(cnn, _int_params(cnn, rng))
+    sim = NetworkSimulator(cnn, _int_params(cnn, rng))
+    for layer, sched in zip(cnn.layers, sim.schedules):
+        if not isinstance(layer, ConvLayer):
+            continue
+        bare = layer.residual_from is not None or layer.name.endswith("_sc")
+        assert sched.tail.activation == (None if bare else "relu"), layer.name
 
 
 def test_imagenet_width_rejected_like_hardware():
