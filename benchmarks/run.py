@@ -264,6 +264,35 @@ def bench_network_sim_resnet():
              f"residual_byte_hops={res.traffic.byte_hops['residual']}")]
 
 
+def bench_dse(budget: int = 64):  # > default space size: exhaustive sweep
+    """Design-space exploration winners (``--dse``): per model, the best
+    placement found at the baseline plan vs the snake baseline — CIFAR
+    winners are bitwise-validated by simulation under the found
+    placement.  Rows are merged into the JSON baseline and ignored by
+    ``--check-regress`` (they carry search results, not wall time)."""
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.dse.report import run_dse
+
+    rows = []
+    for name in CNN_BENCHMARKS:
+        t0 = time.perf_counter()
+        rep = run_dse([name], budget=budget, seed=0)[0]
+        us = (time.perf_counter() - t0) * 1e6
+        r = rep.row()
+        bitwise = {True: "True", False: "FALSE", None: "n/a"}[
+            r["validated_bitwise"]]
+        rows.append((
+            f"dse_{name}", us,
+            f"win={r['strategy'].replace(' ', ';')} "
+            f"byte_hops={r['byte_hops']:.0f} "
+            f"vs_snake={-r['byte_hops_saving_pct']:+.1f}% "
+            f"max_link={r['max_link_bytes']:.0f} "
+            f"(snake {r['max_link_bytes_snake']:.0f}) "
+            f"dTOPS/W={r['tops_per_w'] - r['tops_per_w_snake']:+.3f} "
+            f"bitwise={bitwise}"))
+    return rows
+
+
 def bench_roofline_summary():
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun.json")
@@ -297,8 +326,10 @@ def check_regress(baseline_path: str = "BENCH_core.json",
                   threshold: float = REGRESS_THRESHOLD) -> int:
     """Re-run the ``sim_*`` / ``network_sim_*`` benchmarks and compare
     against the committed baseline JSON; returns a non-zero exit code on
-    any >``threshold``x slowdown (new rows and rows the baseline lacks
-    are informational only).
+    any >``threshold``x slowdown.  Newly-added rows (present fresh but
+    absent from the baseline) are informational only — the gate never
+    fails on them — and non-gated baseline rows (``dse_*`` search
+    results, ``tab4_*``/``fig*`` model rows) are ignored entirely.
 
     Each bench runs twice and the per-row *minimum* is compared —
     wall-clock on a small shared CI box jitters by tens of percent, and
@@ -354,6 +385,11 @@ def main(argv=None) -> None:
                     help="re-run sim_*/network_sim_* rows and fail on a "
                          f">{REGRESS_THRESHOLD}x slowdown vs the committed "
                          "baseline JSON")
+    ap.add_argument("--dse", action="store_true",
+                    help="also run the per-model mapping DSE and emit "
+                         "dse_* winner rows (merged into the JSON "
+                         "baseline; without --dse a --json rewrite keeps "
+                         "the previously committed dse_* rows)")
     args = ap.parse_args(argv)
 
     if args.check_regress:
@@ -361,10 +397,13 @@ def main(argv=None) -> None:
 
     rows = []
     print("name,us_per_call,derived")
-    for fn in (bench_tab4, bench_fig7, bench_fig11, bench_fig12,
+    benches = [bench_tab4, bench_fig7, bench_fig11, bench_fig12,
                bench_kernels, bench_simulator, bench_sim_batched,
                bench_network_sim, bench_network_sim_resnet,
-               bench_roofline_summary):
+               bench_roofline_summary]
+    if args.dse:
+        benches.append(bench_dse)
+    for fn in benches:
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")
@@ -376,6 +415,17 @@ def main(argv=None) -> None:
                          "derived": f"ERROR {type(e).__name__}: {e}"})
 
     if args.json:
+        have_dse = any(r["name"].startswith("dse_") for r in rows)
+        if not have_dse and os.path.exists(args.json):
+            # a rewrite that produced no fresh dse_* rows (no --dse, or
+            # the DSE bench errored) keeps the committed winner rows
+            # instead of silently dropping them
+            try:
+                with open(args.json) as f:
+                    rows.extend(r for r in json.load(f)["rows"]
+                                if r["name"].startswith("dse_"))
+            except (KeyError, ValueError):
+                pass
         with open(args.json, "w") as f:
             json.dump({"bench": "core", "rows": rows}, f, indent=1)
         print(f"# wrote {args.json} ({len(rows)} rows)")

@@ -12,3 +12,6 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --check-regress
+# bounded mapping-DSE smoke: tiny fixed-seed space, winners bitwise-
+# validated against the snake baseline (<30 s; exits non-zero on mismatch)
+python -m repro.dse --smoke --seed 0

@@ -172,8 +172,14 @@ def resnet18_cifar10() -> CNNConfig:
 
 def resnet50_imagenet() -> CNNConfig:
     layers = []
+    # Domino's tail pooling hardware (Fig. 9) supports K_p == S_p only, so
+    # the stem's canonical overlapping 3x3/s2 max-pool deploys as a 2x2/s2
+    # pool here: same 112 -> 56 geometry (the overlapping variant would
+    # yield 55 without pool padding, contradicting the declared layer
+    # shapes), identical MAC/energy anchors (Tab. 4 counts conv MACs and
+    # pre-pool rates only).
     layers.append(ConvLayer("stem", 224, 224, 3, 64, k=7, s=2, p=3,
-                            pool_k=3, pool_s=2))
+                            pool_k=2, pool_s=2))
     h = w = 56
     c = 64
     for stage, (m, n_blocks) in enumerate([(64, 3), (128, 4), (256, 6), (512, 3)]):

@@ -23,7 +23,7 @@ from typing import Dict
 
 from repro.configs.cnn import CNNConfig
 from repro.core.mapping import NetworkPlan, plan_network
-from repro.core.noc import inter_block_byte_hops, place_network
+from repro.core.noc import Placement, inter_block_byte_hops, place_network
 from repro.core.transport import CHAIN, GROUP, conv_block_byte_hops
 
 # --- Tab. 3 component energies (45 nm, 1 V) --------------------------------
@@ -118,7 +118,14 @@ def analyze(cnn: CNNConfig, n_c: int = 256, n_m: int = 256, reuse: int = 1,
     return analyze_plan(cnn, plan)
 
 
-def analyze_plan(cnn: CNNConfig, plan: NetworkPlan) -> EnergyReport:
+def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
+                 placement: "Placement | None" = None) -> EnergyReport:
+    """Energy/throughput report for one planned mapping.
+
+    ``placement`` injects the tile layout to account routed traffic on
+    (the DSE explores non-snake curves); the default remains the snake
+    baseline, so existing callers are unchanged.
+    """
     rep = EnergyReport(
         model=cnn.name,
         macs=plan.total_macs,
@@ -126,7 +133,8 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan) -> EnergyReport:
         ii_cycles=plan.initiation_interval,
     )
     rep.e_cim = plan.total_macs * E_MAC
-    placement = place_network(plan)
+    if placement is None:
+        placement = place_network(plan)
     noc = placement.noc
 
     for li, lp in enumerate(plan.layers):

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Mapping, Optional, Tuple
 
 from repro.configs.cnn import CNNConfig, ConvLayer, FCLayer
 
@@ -66,12 +66,15 @@ class NetworkPlan:
 
     @property
     def initiation_interval(self) -> int:
-        """Steady-state cycles between inferences = the first layer's
-        pixel stream divided by its duplication (validated against Tab. 4:
-        CIFAR 1024/64 = 16 -> 6.25e5 inf/s; ImageNet 50176/64 = 784 ->
-        1.28e4 inf/s at the 10 MHz step clock)."""
-        first = self.layers[0]
-        return max(1, math.ceil(first.out_pixels / first.duplication))
+        """Steady-state cycles between inferences = the slowest conv
+        stage's pixel stream divided by its duplication (validated against
+        Tab. 4: CIFAR 1024/64 = 16 -> 6.25e5 inf/s; ImageNet 50176/64 =
+        784 -> 1.28e4 inf/s at the 10 MHz step clock).  Under rate-sync
+        duplication the first layer is always the bottleneck; per-layer
+        ``dup_overrides`` (DSE) can move it downstream."""
+        return max(
+            max(1, math.ceil(l.out_pixels / l.duplication))
+            for l in self.layers if l.kind == "conv")
 
     @property
     def latency_cycles(self) -> int:
@@ -128,7 +131,9 @@ def plan_fc(layer: FCLayer, n_c: int, n_m: int) -> LayerPlan:
 
 def plan_network(cnn: CNNConfig, n_c: int = 256, n_m: int = 256,
                  reuse: int = 1,
-                 dup_cap: int = MAX_DUPLICATION) -> NetworkPlan:
+                 dup_cap: int = MAX_DUPLICATION,
+                 dup_overrides: Optional[Mapping[str, int]] = None
+                 ) -> NetworkPlan:
     """Plan the whole network with rate-sync duplication / block reuse.
 
     duplication_l = min(dup_cap, out_pixels_l / out_pixels_last_conv)
@@ -136,16 +141,34 @@ def plan_network(cnn: CNNConfig, n_c: int = 256, n_m: int = 256,
     max tiles); ``reuse=4`` matches the paper's Fig. 7 economy point.
     ``dup_cap`` defaults to the paper's 64 (Tab. 4 ResNet-50 row implies
     128 — passed explicitly by that benchmark).
+
+    ``dup_overrides`` caps individual layers below the rate-sync value
+    (``{layer_name: cap}``) — the DSE mutates these to trade per-layer
+    tiles for initiation interval.  An override can only *lower* a
+    layer's duplication (raising it would break rate synchronization),
+    and must stay within [1, MAX_DUPLICATION].
     """
     convs = [l for l in cnn.layers if isinstance(l, ConvLayer)]
     # rate ratios use pre-pool conv outputs (the rate at which results are
     # *produced*; pooling only thins what is forwarded)
     last_pixels = convs[-1].conv_out_h * convs[-1].conv_out_w
+    overrides = dict(dup_overrides or {})
+    unknown = set(overrides) - {l.name for l in convs}
+    if unknown:
+        raise ValueError(f"{cnn.name}: dup_overrides for unknown conv "
+                         f"layers {sorted(unknown)}")
     plans: List[LayerPlan] = []
     for layer in cnn.layers:
         if isinstance(layer, ConvLayer):
             rate = (layer.conv_out_h * layer.conv_out_w) / last_pixels
             dup = max(1, min(dup_cap, round(rate)) // reuse)
+            if layer.name in overrides:
+                cap = overrides[layer.name]
+                if not 1 <= cap <= MAX_DUPLICATION:
+                    raise ValueError(
+                        f"{cnn.name}: dup override {cap} for {layer.name} "
+                        f"outside [1, {MAX_DUPLICATION}]")
+                dup = min(dup, cap)
             plans.append(plan_conv(layer, n_c, n_m, dup))
         else:
             plans.append(plan_fc(layer, n_c, n_m))

@@ -43,8 +43,12 @@ Functional notes:
 * ResNet's global average pool before the FC head is computed at the FC
   block boundary (the jax reference's ``jnp.mean``), VGG flattens;
 * layers whose schedule period W + 2P exceeds the 128-entry table (Tab.
-  3) fail to compile, exactly like the hardware — use CIFAR-sized
-  models (e.g. ``vgg11-cifar10``) for full-network runs.
+  3) cannot compile as one schedule, exactly like the hardware — the
+  simulator width-tiles them (``compile_conv_strips``): the same tile
+  chain runs per-strip tables back to back, halo input columns are
+  re-streamed at strip boundaries, and output strips concatenate.  This
+  is how the ImageNet models (e.g. ``resnet50-imagenet``) run
+  end-to-end.
 """
 from __future__ import annotations
 
@@ -54,9 +58,15 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.cnn import CNNConfig, ConvLayer, FCLayer
+from repro.core.instructions import TABLE_CAPACITY
 from repro.core.mapping import NetworkPlan, plan_network
-from repro.core.noc import Placement, place_network
-from repro.core.schedule import BlockSchedule, compile_conv_block
+from repro.core.noc import Placement, block_spans, place_network
+from repro.core.schedule import (
+    BlockSchedule,
+    ConvStrip,
+    compile_conv_block,
+    compile_conv_strips,
+)
 from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
 from repro.core.trace import TracePlan, TraceExecutor, compile_trace
 from repro.core.transport import (
@@ -88,9 +98,19 @@ class NetworkSimulator:
     def __init__(self, cnn: CNNConfig, params: Dict[str, np.ndarray],
                  n_c: int = 256, n_m: int = 256, reuse: int = 1,
                  dup_cap: int = 64, backend: str = "interp",
-                 trace_jit: bool = False):
+                 trace_jit: bool = False,
+                 placement: Optional[Placement] = None,
+                 dup_overrides: Optional[Dict[str, int]] = None):
         """params: layer name -> (K, K, C, M) conv kernel or (C_in, C_out)
-        FC matrix (the ``models/cnn.py::init_cnn`` convention)."""
+        FC matrix (the ``models/cnn.py::init_cnn`` convention).
+
+        ``placement`` injects an alternative tile layout (a DSE strategy's
+        output) instead of the snake default.  Its block spans must match
+        this plan's, and its tile-id curve must keep consecutive chain
+        tiles within the interpreter's rendezvous slack (any unit-step
+        curve qualifies — ``repro.dse.placements.validate_placement``
+        checks); placement changes hops and energy, never the math.
+        """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         if trace_jit and backend != "trace":
@@ -135,52 +155,99 @@ class NetworkSimulator:
         self.backend = backend
         self.trace_jit = trace_jit
         self.plan: NetworkPlan = plan_network(cnn, n_c=n_c, n_m=n_m,
-                                              reuse=reuse, dup_cap=dup_cap)
-        self.placement: Placement = place_network(self.plan)
+                                              reuse=reuse, dup_cap=dup_cap,
+                                              dup_overrides=dup_overrides)
+        if placement is None:
+            placement = place_network(self.plan)
+        else:
+            spans = block_spans(self.plan)
+            if (placement.block_start, placement.block_end) != spans:
+                raise ValueError(
+                    f"{cnn.name}: injected placement's block spans do not "
+                    "match this plan (was it built from the same "
+                    "n_c/n_m/reuse/dup_cap?)")
+            if placement.noc.num_tiles < self.plan.total_tiles:
+                raise ValueError(
+                    f"{cnn.name}: {self.plan.total_tiles} tiles do not fit "
+                    f"the injected {placement.noc.rows}x"
+                    f"{placement.noc.cols} mesh")
+        self.placement: Placement = placement
         self.schedules: List[Optional[BlockSchedule]] = []
-        for layer, lp in zip(cnn.layers, self.plan.layers):
+        # layers whose period W + 2P exceeds the 128-entry table compile
+        # as width strips run back to back on the same tile chain
+        self._strips: Dict[int, Tuple[ConvStrip, ...]] = {}
+        for li, (layer, lp) in enumerate(zip(cnn.layers, self.plan.layers)):
             if isinstance(layer, ConvLayer):
                 # residual targets and projection shortcuts compile with a
                 # bare tail: activation fires *after* the shortcut add
                 act = None if (layer.residual_from or _is_shortcut(layer)) \
                     else "relu"
-                self.schedules.append(compile_conv_block(
-                    layer.name, h=layer.h, w=layer.w, c_in=layer.c,
-                    c_out=layer.m, k=layer.k, stride=layer.s, pad=layer.p,
-                    pack=lp.pack, c_splits=lp.c_splits,
-                    pool_k=layer.pool_k, pool_s=layer.pool_s,
-                    activation=act))
+                kw = dict(h=layer.h, w=layer.w, c_in=layer.c,
+                          c_out=layer.m, k=layer.k, stride=layer.s,
+                          pad=layer.p, pack=lp.pack, c_splits=lp.c_splits,
+                          pool_k=layer.pool_k, pool_s=layer.pool_s,
+                          activation=act)
+                if layer.w + 2 * layer.p > TABLE_CAPACITY:
+                    self._strips[li] = compile_conv_strips(layer.name, **kw)
+                    self.schedules.append(None)
+                else:
+                    self.schedules.append(
+                        compile_conv_block(layer.name, **kw))
             else:
                 self.schedules.append(None)  # FC runs the Fig. 4 grid
         # trace backend: lower every schedule once; executors are
         # stateless and reused across runs (keeps jitted fns warm too)
-        self._trace_plans: Dict[int, TracePlan] = {}
-        self._executors: Dict[int, TraceExecutor] = {}
+        self._trace_plans: Dict[Tuple[int, int], TracePlan] = {}
+        self._executors: Dict[Tuple[int, int], TraceExecutor] = {}
         if backend == "trace":
             for li, sched in enumerate(self.schedules):
                 if sched is not None:
-                    self._trace_plans[li] = compile_trace(sched)
+                    self._trace_plans[li, 0] = compile_trace(sched)
+            for li, strips in self._strips.items():
+                for si, strip in enumerate(strips):
+                    self._trace_plans[li, si] = compile_trace(strip.sched)
 
-    def _block(self, li: int, transport: NoCTransport,
-               counters: SimCounters):
-        """A per-layer block engine on the chosen backend."""
+    def _engine(self, li: int, si: int, sched: BlockSchedule,
+                transport: NoCTransport, counters: SimCounters):
+        """A block engine for (layer, strip) on the chosen backend."""
         layer = self.cnn.layers[li]
         if self.backend == "interp":
             return BlockSimulator(
-                self.schedules[li],
+                sched,
                 np.asarray(self.params[layer.name], np.float64),
                 bias=None, transport=transport, counters=counters)
-        ex = self._executors.get(li)
+        ex = self._executors.get((li, si))
         if ex is None:
             ex = TraceExecutor(
-                self.schedules[li],
+                sched,
                 np.asarray(self.params[layer.name], np.float64),
                 bias=None, transport=transport, counters=counters,
-                plan=self._trace_plans[li], use_jax=self.trace_jit)
-            self._executors[li] = ex
+                plan=self._trace_plans[li, si], use_jax=self.trace_jit)
+            self._executors[li, si] = ex
         else:
             ex.transport, ex.counters = transport, counters
         return ex
+
+    def _run_layer(self, li: int, transport: NoCTransport,
+                   counters: SimCounters, x: np.ndarray) -> np.ndarray:
+        """Run one conv layer's block — whole, or strip by strip when the
+        layer is width-tiled (same chain, per-strip tables, halo columns
+        re-streamed; output strips concatenate along the width)."""
+        strips = self._strips.get(li)
+        if strips is None:
+            return self._engine(li, 0, self.schedules[li], transport,
+                                counters).run(x)
+        layer = self.cnn.layers[li]
+        b, p = x.shape[0], layer.p
+        padded = np.zeros((b, layer.h + 2 * p, layer.w + 2 * p, layer.c),
+                          np.float64)
+        padded[:, p:p + layer.h, p:p + layer.w] = x
+        outs = [
+            self._engine(li, si, strip.sched, transport, counters)
+            .run(padded[:, :, strip.lo:strip.hi])
+            for si, strip in enumerate(strips)
+        ]
+        return np.concatenate(outs, axis=2)
 
     def run(self, images: np.ndarray) -> NetworkSimResult:
         """images: (B, H, W, 3) or (H, W, 3) -> logits (B, classes)."""
@@ -208,7 +275,7 @@ class NetworkSimulator:
             if isinstance(layer, ConvLayer):
                 if layer.name.endswith("_a"):
                     block_in, block_in_src = x, prev_src
-                y = self._block(li, transport, counters).run(x)
+                y = self._run_layer(li, transport, counters, x)
                 if layer.residual_from is not None:
                     nxt = layers[li + 1] if li + 1 < len(layers) else None
                     if _is_shortcut(nxt):
@@ -220,8 +287,8 @@ class NetworkSimulator:
                         self._record_residual(
                             mesh_root, block_in_src,
                             placement.block_start[li + 1], block_in)
-                        shortcut = self._block(li + 1, sc_tr,
-                                               counters).run(block_in)
+                        shortcut = self._run_layer(li + 1, sc_tr,
+                                                   counters, block_in)
                         lp = self.plan.layers[li + 1]
                         mesh_root.record(
                             placement.block_end[li + 1],

@@ -1,14 +1,19 @@
 """2-D mesh NoC topology model: placement, XY routing, link accounting.
 
-Used by the energy model (inter-block OFM traffic hops) and by the
-roofline sanity checks (ring vs all-reduce hop counts on the ICI-level
-analogue).
+Used by the energy model (inter-block OFM traffic hops), the whole-network
+simulator (shared routed transport) and the design-space explorer
+(``repro/dse``), which injects alternative tile-id -> coordinate curves
+(``MeshNoC.order``) instead of the default snake.
+
+Routes and hop counts are memoized per instance (the DSE inner loop asks
+for the same few thousand routes over and over); the topology fields
+(``rows``/``cols``/``order``) must not be mutated after construction.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.mapping import NetworkPlan
 
@@ -20,12 +25,30 @@ class MeshNoC:
     link_traffic: Dict[Tuple[Tuple[int, int], Tuple[int, int]], int] = field(
         default_factory=dict
     )
+    #: optional tile-id -> (row, col) curve covering the whole mesh; when
+    #: None the default snake order applies.  Injected by placement
+    #: strategies (repro/dse/placements.py) — must be a bijection onto the
+    #: mesh cells and is treated as immutable.
+    order: Optional[Tuple[Tuple[int, int], ...]] = None
+    # per-instance memo tables (topology is immutable after construction)
+    _hops_cache: Dict[Tuple[int, int], int] = field(
+        default_factory=dict, repr=False, compare=False)
+    _route_cache: Dict[Tuple[int, int], List[Tuple[int, int]]] = field(
+        default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.order is not None and len(self.order) != self.rows * self.cols:
+            raise ValueError(
+                f"order must cover all {self.rows * self.cols} mesh cells, "
+                f"got {len(self.order)}")
 
     @property
     def num_tiles(self) -> int:
         return self.rows * self.cols
 
     def coord(self, tile_id: int) -> Tuple[int, int]:
+        if self.order is not None:
+            return self.order[tile_id]
         # snake order: even rows left->right, odd rows right->left, so
         # consecutive tiles are always physically adjacent (Domino chains)
         r = tile_id // self.cols
@@ -35,11 +58,20 @@ class MeshNoC:
         return r, c
 
     def hops(self, a: int, b: int) -> int:
-        (r1, c1), (r2, c2) = self.coord(a), self.coord(b)
-        return abs(r1 - r2) + abs(c1 - c2)
+        key = (a, b)
+        h = self._hops_cache.get(key)
+        if h is None:
+            (r1, c1), (r2, c2) = self.coord(a), self.coord(b)
+            h = abs(r1 - r2) + abs(c1 - c2)
+            self._hops_cache[key] = h
+        return h
 
     def route(self, a: int, b: int) -> List[Tuple[int, int]]:
-        """XY route as a coordinate list (X first, then Y)."""
+        """XY route as a coordinate list (X first, then Y); memoized."""
+        key = (a, b)
+        path = self._route_cache.get(key)
+        if path is not None:
+            return path
         (r1, c1), (r2, c2) = self.coord(a), self.coord(b)
         path = [(r1, c1)]
         step = 1 if c2 > c1 else -1
@@ -48,6 +80,7 @@ class MeshNoC:
         step = 1 if r2 > r1 else -1
         for r in range(r1 + step, r2 + step, step) if r2 != r1 else []:
             path.append((r, c2))
+        self._route_cache[key] = path
         return path
 
     def add_traffic(self, a: int, b: int, nbytes: int) -> None:
@@ -67,12 +100,16 @@ class MeshNoC:
 
 @dataclass(frozen=True)
 class Placement:
-    """Blocks placed contiguously in snake order (tiles of one block are
-    adjacent; consecutive blocks abut — Domino's 'tiles placed closely')."""
+    """Blocks placed contiguously along the mesh's tile-id curve (tiles of
+    one block are consecutive ids; consecutive blocks abut — Domino's
+    'tiles placed closely').  The curve itself is the ``noc``'s: snake by
+    default, or whatever a placement strategy injected via
+    ``MeshNoC.order``."""
 
     noc: MeshNoC
     block_start: Tuple[int, ...]  # first tile id of each layer block
     block_end: Tuple[int, ...]    # last tile id (the block tail)
+    strategy: str = "snake"       # the placement strategy that produced it
 
     def chain_base(self, layer: int, copy: int = 0, m_split: int = 0, *,
                    tiles_per_copy: int, chain_len: int) -> int:
@@ -82,23 +119,39 @@ class Placement:
                 + m_split * chain_len)
 
 
-def place_network(plan: NetworkPlan) -> Placement:
-    total = plan.total_tiles
-    side = math.ceil(math.sqrt(total))
-    noc = MeshNoC(rows=side, cols=side)
+def block_spans(plan: NetworkPlan) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Per-layer (first, last) tile ids along the curve — placement-curve
+    independent (ids are always consecutive per block)."""
     starts, ends = [], []
     cursor = 0
     for layer in plan.layers:
         starts.append(cursor)
         cursor += layer.total_tiles
         ends.append(cursor - 1)
-    return Placement(noc=noc, block_start=tuple(starts), block_end=tuple(ends))
+    return tuple(starts), tuple(ends)
+
+
+def place_network(plan: NetworkPlan, noc: Optional[MeshNoC] = None,
+                  strategy: str = "snake") -> Placement:
+    """Default placement: square mesh, snake curve.  Pass a pre-built
+    ``noc`` (possibly with an injected ``order`` curve) to place the same
+    block spans on a different fabric — the DSE strategies do."""
+    if noc is None:
+        side = math.ceil(math.sqrt(plan.total_tiles))
+        noc = MeshNoC(rows=side, cols=side)
+    elif noc.num_tiles < plan.total_tiles:
+        raise ValueError(
+            f"{plan.model}: {plan.total_tiles} tiles do not fit a "
+            f"{noc.rows}x{noc.cols} mesh")
+    starts, ends = block_spans(plan)
+    return Placement(noc=noc, block_start=starts, block_end=ends,
+                     strategy=strategy)
 
 
 def inter_block_byte_hops(plan: NetworkPlan, bytes_per_output: int = 1,
                           placement: Placement | None = None) -> int:
     """OFM bytes x hops moving from each block's tail to the next block's
-    head, with the snake placement (adjacent blocks -> 1 hop typically).
+    head (adjacent blocks -> 1 hop for any unit-step curve).
 
     Pass an existing ``placement`` to account on a shared mesh (the
     whole-network simulator uses this so its routed OFM counters equal

@@ -292,6 +292,80 @@ def compile_conv_block(
     )
 
 
+@dataclass(frozen=True)
+class ConvStrip:
+    """One vertical IFM strip of a width-tiled conv layer.
+
+    ``f0:f1`` are the output columns this strip produces; ``lo:hi`` the
+    padded input columns it streams (halo columns overlap between
+    strips, exactly like re-streaming them on hardware).  ``sched`` is
+    the strip's own compiled schedule (pad = 0 — the strip is cut from
+    an explicitly pre-padded IFM)."""
+
+    f0: int
+    f1: int
+    lo: int
+    hi: int
+    sched: BlockSchedule
+
+
+def compile_conv_strips(
+    name: str,
+    h: int,
+    w: int,
+    c_in: int,
+    c_out: int,
+    k: int = 3,
+    stride: int = 1,
+    pad: int = 1,
+    pack: int = 1,
+    c_splits: int = 1,
+    pool_k: int = 0,
+    pool_s: int = 0,
+    activation: Optional[str] = "relu",
+    capacity: int = TABLE_CAPACITY,
+) -> Tuple[ConvStrip, ...]:
+    """Width-tile a layer whose period W + 2P exceeds the schedule table
+    (the compiler's own suggested fix): split the output columns into
+    strips narrow enough that each strip's period fits ``capacity``, and
+    compile one schedule per strip.  The same physical tile chain runs
+    the strips back to back with re-loaded tables; halo input columns are
+    re-streamed at strip boundaries.
+
+    Strips are cut in *padded* coordinates: output column y reads padded
+    input columns [y*s, y*s + k), so callers pre-pad the IFM explicitly
+    and slice ``[lo, hi)`` per strip (each strip schedule uses pad=0).
+    Pooling constrains strip boundaries to multiples of the pool stride
+    so no pooling window straddles a strip.
+    """
+    f_total = (w + 2 * pad - k + stride) // stride
+    max_f = (capacity - k) // stride + 1
+    if pool_s:
+        if f_total % pool_s:
+            raise ValueError(
+                f"{name}: pooling {pool_s} does not tile the {f_total}-wide "
+                "OFM; cannot width-strip")
+        max_f -= max_f % pool_s
+    if max_f < 1:
+        raise ValueError(
+            f"{name}: kernel {k} / stride {stride} / pool {pool_s} leave no "
+            f"feasible strip width under the {capacity}-entry table")
+    strips = []
+    f0 = 0
+    while f0 < f_total:
+        f1 = min(f_total, f0 + max_f)
+        lo = f0 * stride
+        hi = (f1 - 1) * stride + k
+        sched = compile_conv_block(
+            f"{name}[{f0}:{f1}]", h=h + 2 * pad, w=hi - lo,
+            c_in=c_in, c_out=c_out, k=k, stride=stride, pad=0,
+            pack=pack, c_splits=c_splits, pool_k=pool_k, pool_s=pool_s,
+            activation=activation)
+        strips.append(ConvStrip(f0=f0, f1=f1, lo=lo, hi=hi, sched=sched))
+        f0 = f1
+    return tuple(strips)
+
+
 def compile_tail(pool_k: int, pool_s: int,
                  activation: Optional[str]) -> TailProgram:
     """M-type table for the block tail: activation on every output, plus the

@@ -159,12 +159,17 @@ def conv_block_byte_hops(noc: MeshNoC, base: int, k: int, group_size: int,
     """Float variant for the energy model (fires may be fractional when
     output pixels are spread over weight-duplicated copies).
 
-    Chain links join consecutive snake-placed tiles, which are physically
-    adjacent by construction (``MeshNoC.coord`` snake order), so only the
-    (k-1) group links need an actual route lookup.
+    Every link — chain links included — is routed through the (memoized)
+    ``MeshNoC.hops``, so the energy model tracks whatever tile-id curve
+    the placement injected.  On the default snake curve consecutive ids
+    are adjacent *by construction*, so chain links keep the constant-1
+    fast path (the energy model builds a fresh mesh per call — cold
+    lookups for every placed copy would dominate its wall time).
     """
     out = {CHAIN: 0.0, GROUP: 0.0}
+    snake = noc.order is None
     for src, dst, kind in conv_links(k, group_size):
-        h = 1 if kind == CHAIN else noc.hops(base + src, base + dst)
+        h = 1 if (snake and kind == CHAIN) \
+            else noc.hops(base + src, base + dst)
         out[kind] += fires * h * payload_bytes
     return out

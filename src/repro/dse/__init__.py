@@ -1,0 +1,55 @@
+"""Design-space exploration for Domino mappings.
+
+Turns the mapping (placement curve, mesh aspect, weight duplication,
+block reuse) from a constant into a searchable space:
+
+* :mod:`repro.dse.placements` — pluggable ``PlacementStrategy`` set
+  (snake / boustrophedon / hilbert / greedy), the analytic link model,
+  and the rendezvous-slack validator;
+* :mod:`repro.dse.space`      — ``MappingConfig`` / ``DesignSpace``
+  enumeration with ``plan_network`` as the feasibility oracle;
+* :mod:`repro.dse.search`     — exhaustive sweep or seeded simulated
+  annealing, scored by the analytic energy model + routed byte-hops;
+* :mod:`repro.dse.report`     — Pareto frontiers over (TOPS/W, inf/s,
+  tiles, max link bytes) and markdown/JSON reports, plus the bitwise
+  placement-invariance validation.
+
+CLI: ``python -m repro.dse --models vgg11-cifar10 resnet18-cifar10``.
+"""
+from repro.dse.placements import (
+    BoustrophedonBlockPlacement,
+    GreedyTrafficPlacement,
+    HilbertPlacement,
+    PlacementStrategy,
+    SnakePlacement,
+    network_links,
+    strategies,
+    validate_placement,
+)
+from repro.dse.report import (
+    ModelReport,
+    dominates,
+    pareto_front,
+    run_dse,
+    to_json,
+    to_markdown,
+    validate_bitwise,
+)
+from repro.dse.search import (
+    Candidate,
+    Score,
+    SearchResult,
+    evaluate,
+    routed_traffic,
+    search,
+)
+from repro.dse.space import Built, DesignSpace, MappingConfig
+
+__all__ = [
+    "BoustrophedonBlockPlacement", "Built", "Candidate", "DesignSpace",
+    "GreedyTrafficPlacement", "HilbertPlacement", "MappingConfig",
+    "ModelReport", "PlacementStrategy", "Score", "SearchResult",
+    "SnakePlacement", "dominates", "evaluate", "network_links",
+    "pareto_front", "routed_traffic", "run_dse", "search", "strategies",
+    "to_json", "to_markdown", "validate_bitwise", "validate_placement",
+]

@@ -1,0 +1,71 @@
+"""CLI: explore Domino mapping spaces and print a Pareto report.
+
+    PYTHONPATH=src python -m repro.dse                       # CIFAR models
+    PYTHONPATH=src python -m repro.dse --models vgg16-imagenet --budget 64
+    PYTHONPATH=src python -m repro.dse --smoke               # CI-sized run
+
+``--smoke`` shrinks the space (two strategies, one aspect) and skips
+nothing the acceptance cares about: the winner is still bitwise-
+validated against the snake baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.configs.cnn import CNN_BENCHMARKS
+from repro.dse.report import run_dse, to_json, to_markdown
+from repro.dse.space import DesignSpace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dse", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--models", nargs="+",
+                    default=["vgg11-cifar10", "resnet18-cifar10"],
+                    choices=sorted(CNN_BENCHMARKS),
+                    help="models to explore (default: the CIFAR pair)")
+    ap.add_argument("--budget", type=int, default=128,
+                    help="max configurations evaluated per model")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="annealer seed (searches are deterministic)")
+    ap.add_argument("--validate", choices=("none", "cifar10", "all"),
+                    default="cifar10",
+                    help="bitwise-check winners by simulating under the "
+                         "found placement (default: CIFAR models)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the report as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed space for CI (<30 s)")
+    args = ap.parse_args(argv)
+
+    space_factory = None
+    budget = args.budget
+    if args.smoke:
+        budget = min(budget, 16)
+
+        def space_factory(cnn):
+            return DesignSpace(
+                cnn, strategy_names=("snake", "hilbert", "boustrophedon"),
+                aspects=(1.0,), reuses=(1, 4), bands=(3,),
+                dup_caps=(128 if cnn.name == "resnet50-imagenet" else 64,))
+
+    reports = run_dse(args.models, budget=budget, seed=args.seed,
+                      validate=args.validate, space_factory=space_factory)
+    sys.stdout.write(to_markdown(reports))
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(to_json(reports))
+        print(f"\n# wrote {args.json}")
+
+    failed = [r.model for r in reports if r.validated is False]
+    if failed:
+        print(f"# BITWISE MISMATCH under winning placement: {failed}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,207 @@
+"""Pareto frontiers and DSE reports (the shape of the paper's Tab. 4 /
+Fig. 7 trade-off, per model).
+
+The frontier is computed over four axes: compute efficiency (TOPS/W,
+max), throughput (inferences/s, max), chip cost (tiles, min) and NoC
+hotspot (max link bytes, min).  ``run_dse`` drives the whole flow —
+search, winner selection, optional bitwise validation against the snake
+baseline — and renders markdown / JSON.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.cnn import CNN_BENCHMARKS, CNNConfig, ConvLayer
+from repro.dse.search import Candidate, SearchResult, search
+from repro.dse.space import DesignSpace
+
+#: (attribute, sense) — sense +1 maximizes, -1 minimizes
+PARETO_AXES: Tuple[Tuple[str, int], ...] = (
+    ("tops_per_w", +1),
+    ("inf_per_s", +1),
+    ("tiles", -1),
+    ("max_link_bytes", -1),
+)
+
+
+def dominates(a, b, axes: Sequence[Tuple[str, int]] = PARETO_AXES) -> bool:
+    """True iff ``a`` is no worse than ``b`` on every axis and strictly
+    better on at least one (scores, or anything with the axis attrs)."""
+    strict = False
+    for attr, sense in axes:
+        va, vb = getattr(a, attr) * sense, getattr(b, attr) * sense
+        if va < vb:
+            return False
+        if va > vb:
+            strict = True
+    return strict
+
+
+def pareto_front(items: Sequence, key: Callable = lambda c: c.score,
+                 axes: Sequence[Tuple[str, int]] = PARETO_AXES) -> List:
+    """Non-dominated subset of ``items`` (order-preserving)."""
+    front = []
+    for i, it in enumerate(items):
+        si = key(it)
+        dominated = False
+        for j, other in enumerate(items):
+            if j == i:
+                continue
+            so = key(other)
+            if dominates(so, si, axes):
+                dominated = True
+                break
+            # exact duplicates: keep only the first occurrence
+            if j < i and all(getattr(so, a) == getattr(si, a)
+                             for a, _ in axes):
+                dominated = True
+                break
+        if not dominated:
+            front.append(it)
+    return front
+
+
+# ---------------------------------------------------------------------------
+# Per-model report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelReport:
+    model: str
+    result: SearchResult
+    winner: Candidate
+    validated: Optional[bool]  # bitwise-vs-baseline; None = not run
+
+    def row(self) -> Dict:
+        base, win = self.result.baseline.score, self.winner.score
+        return {
+            "model": self.model,
+            "strategy": self.winner.config.describe(),
+            "byte_hops": win.total_byte_hops,
+            "byte_hops_snake": base.total_byte_hops,
+            "byte_hops_saving_pct":
+                100.0 * (1 - win.total_byte_hops / base.total_byte_hops),
+            "max_link_bytes": win.max_link_bytes,
+            "max_link_bytes_snake": base.max_link_bytes,
+            "tops_per_w": win.tops_per_w,
+            "tops_per_w_snake": base.tops_per_w,
+            "inf_per_s": win.inf_per_s,
+            "tiles": win.tiles,
+            "evaluations": self.result.evaluations,
+            "mode": self.result.mode,
+            "validated_bitwise": self.validated,
+        }
+
+    def pareto_rows(self) -> List[Dict]:
+        rows = []
+        for c in pareto_front(self.result.candidates):
+            rows.append({"config": c.config.describe(),
+                         **c.score.as_dict()})
+        return sorted(rows, key=lambda r: -r["tops_per_w"])
+
+
+def validate_bitwise(cnn: CNNConfig, winner: Candidate,
+                     batch: int = 2, seed: int = 0) -> bool:
+    """Run ``NetworkSimulator`` under the winner's placement and under
+    the snake baseline of the *same plan* — outputs must be bitwise
+    equal (placement changes hops, never math)."""
+    from repro.core.network import NetworkSimulator
+
+    rng = np.random.default_rng(seed)
+    params = {}
+    for l in cnn.layers:
+        if isinstance(l, ConvLayer):
+            params[l.name] = rng.integers(
+                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
+        else:
+            params[l.name] = rng.integers(
+                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    x = rng.integers(0, 2, (batch, cnn.input_hw, cnn.input_hw, 3)
+                     ).astype(np.float64)
+    cfg = winner.config
+    kw = dict(reuse=cfg.reuse, dup_cap=cfg.dup_cap,
+              dup_overrides=dict(cfg.dup_overrides), backend="trace")
+    base = NetworkSimulator(cnn, params, **kw).run(x)
+    opt = NetworkSimulator(cnn, params, placement=winner.placement,
+                           **kw).run(x)
+    return bool(np.array_equal(base.logits, opt.logits))
+
+
+def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
+            validate: str = "cifar10",
+            space_factory: Optional[Callable[[CNNConfig], DesignSpace]]
+            = None) -> List[ModelReport]:
+    """Search each model's space and assemble reports.
+
+    ``validate``: "none", "cifar10" (default: bitwise-check winners of
+    simulable CIFAR-sized models only) or "all".
+    """
+    reports = []
+    for name in models:
+        cnn = CNN_BENCHMARKS[name]()
+        dup_cap = 128 if name == "resnet50-imagenet" else 64
+        space = space_factory(cnn) if space_factory else DesignSpace(
+            cnn, dup_caps=(dup_cap,))
+        result = search(cnn, space, budget=budget, seed=seed,
+                        dup_cap=dup_cap)
+        winner = result.winner()
+        validated: Optional[bool] = None
+        if validate == "all" or (validate == "cifar10"
+                                 and cnn.dataset == "cifar10"):
+            validated = validate_bitwise(cnn, winner, seed=seed)
+        reports.append(ModelReport(model=name, result=result,
+                                   winner=winner, validated=validated))
+    return reports
+
+
+# ---------------------------------------------------------------------------
+# Rendering
+# ---------------------------------------------------------------------------
+
+
+def to_markdown(reports: Sequence[ModelReport]) -> str:
+    lines = ["# Domino mapping DSE report", "",
+             "## Best-found mapping per model (vs snake baseline)", "",
+             "| model | winning mapping | byte-hops (vs snake) | "
+             "max link B (vs snake) | TOPS/W (vs snake) | inf/s | tiles | "
+             "bitwise |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rep in reports:
+        r = rep.row()
+        v = {True: "==", False: "MISMATCH", None: "n/a"}[r[
+            "validated_bitwise"]]
+        lines.append(
+            f"| {r['model']} | {r['strategy']} "
+            f"| {r['byte_hops']:,.0f} ({-r['byte_hops_saving_pct']:+.1f}%) "
+            f"| {r['max_link_bytes']:,.0f} "
+            f"(snake {r['max_link_bytes_snake']:,.0f}) "
+            f"| {r['tops_per_w']:.2f} (snake {r['tops_per_w_snake']:.2f}) "
+            f"| {r['inf_per_s']:.3g} | {r['tiles']} | {v} |")
+    for rep in reports:
+        lines += ["", f"## {rep.model} Pareto frontier "
+                      f"({rep.result.mode}, {rep.result.evaluations} "
+                      "evaluations)", "",
+                  "| config | TOPS/W | inf/s | tiles | max link B | "
+                  "byte-hops |",
+                  "|---|---|---|---|---|---|"]
+        for r in rep.pareto_rows():
+            lines.append(
+                f"| {r['config']} | {r['tops_per_w']:.2f} "
+                f"| {r['inf_per_s']:.3g} | {r['tiles']:.0f} "
+                f"| {r['max_link_bytes']:,.0f} "
+                f"| {r['total_byte_hops']:,.0f} |")
+    return "\n".join(lines) + "\n"
+
+
+def to_json(reports: Sequence[ModelReport]) -> str:
+    return json.dumps({
+        "dse": [{
+            **rep.row(),
+            "pareto": rep.pareto_rows(),
+        } for rep in reports]
+    }, indent=1)

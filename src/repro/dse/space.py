@@ -1,0 +1,170 @@
+"""The mapping design space: what the DSE enumerates and mutates.
+
+A :class:`MappingConfig` is one point: a placement strategy, a mesh
+aspect ratio, the block-reuse depth and weight-duplication cap (the
+paper's Fig. 7 knobs), plus optional per-layer duplication overrides.
+:class:`DesignSpace` enumerates the grid of points and *builds* them —
+``plan_network`` is the feasibility oracle (a config whose plan fails to
+build, whose tiles don't fit the mesh, or whose placement violates the
+rendezvous slack is simply infeasible and skipped).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.configs.cnn import CNNConfig, ConvLayer
+from repro.core.mapping import MAX_DUPLICATION, NetworkPlan, plan_network
+from repro.core.noc import Placement
+from repro.dse.placements import (
+    PlacementStrategy,
+    strategies,
+    validate_placement,
+)
+
+
+@dataclass(frozen=True)
+class MappingConfig:
+    """One point of the design space (hashable, mutation-friendly)."""
+
+    strategy: str = "snake"
+    aspect: float = 1.0          # target mesh rows/cols ratio
+    reuse: int = 1               # block-reuse depth (Fig. 7)
+    dup_cap: int = MAX_DUPLICATION
+    band: int = 2                # boustrophedon band height
+    #: per-layer duplication caps, sorted name order (hashability)
+    dup_overrides: Tuple[Tuple[str, int], ...] = ()
+
+    def describe(self) -> str:
+        bits = [self.strategy, f"aspect={self.aspect:g}",
+                f"reuse={self.reuse}", f"dup_cap={self.dup_cap}"]
+        if self.strategy == "boustrophedon":
+            bits.append(f"band={self.band}")
+        if self.dup_overrides:
+            bits.append("dups={" + ",".join(
+                f"{n}:{v}" for n, v in self.dup_overrides) + "}")
+        return " ".join(bits)
+
+
+def mesh_shape_for(total: int, aspect: float) -> Tuple[int, int]:
+    """Smallest rows x cols mesh fitting ``total`` tiles at ~``aspect``
+    = rows/cols."""
+    rows = max(1, round(math.sqrt(total * aspect)))
+    cols = math.ceil(total / rows)
+    return rows, cols
+
+
+@dataclass
+class Built:
+    """A feasible, built configuration (what the scorer consumes)."""
+
+    config: MappingConfig
+    plan: NetworkPlan
+    placement: Placement
+
+
+class DesignSpace:
+    """Enumerable grid of :class:`MappingConfig` for one model.
+
+    ``build`` returns None for infeasible points; ``plan_network`` is
+    the oracle (it raises on bad duplication/overrides), the mesh-fit
+    and rendezvous-slack checks complete it.
+    """
+
+    def __init__(self, cnn: CNNConfig,
+                 strategy_names: Tuple[str, ...] = (
+                     "snake", "boustrophedon", "hilbert", "greedy"),
+                 aspects: Tuple[float, ...] = (1.0, 2.0, 0.5),
+                 reuses: Tuple[int, ...] = (1, 2, 4),
+                 dup_caps: Tuple[int, ...] = (MAX_DUPLICATION,),
+                 bands: Tuple[int, ...] = (2, 3),
+                 n_c: int = 256, n_m: int = 256):
+        self.cnn = cnn
+        self.strategy_names = strategy_names
+        self.aspects = aspects
+        self.reuses = reuses
+        self.dup_caps = dup_caps
+        self.bands = bands
+        self.n_c, self.n_m = n_c, n_m
+        self.conv_names: Tuple[str, ...] = tuple(
+            l.name for l in cnn.layers if isinstance(l, ConvLayer))
+        self._strategies: Dict[int, Dict[str, PlacementStrategy]] = {}
+
+    # -- enumeration --------------------------------------------------------
+
+    def configs(self) -> Iterator[MappingConfig]:
+        for strat, aspect, reuse, cap in itertools.product(
+                self.strategy_names, self.aspects, self.reuses,
+                self.dup_caps):
+            if strat == "boustrophedon":
+                for band in self.bands:
+                    yield MappingConfig(strategy=strat, aspect=aspect,
+                                        reuse=reuse, dup_cap=cap, band=band)
+            else:
+                yield MappingConfig(strategy=strat, aspect=aspect,
+                                    reuse=reuse, dup_cap=cap)
+
+    @property
+    def size(self) -> int:
+        n_strat = sum(len(self.bands) if s == "boustrophedon" else 1
+                      for s in self.strategy_names)
+        return n_strat * len(self.aspects) * len(self.reuses) \
+            * len(self.dup_caps)
+
+    # -- mutation (the annealer's neighborhood) ------------------------------
+
+    def mutate(self, cfg: MappingConfig, rng) -> MappingConfig:
+        """One random neighbor of ``cfg`` (rng: ``random.Random``).
+
+        ``band`` only exists for the boustrophedon strategy — it is
+        never mutated elsewhere, and leaving boustrophedon resets it to
+        the dataclass default, so configs differing only in a dead knob
+        can't burn annealing budget as fake neighbors."""
+        knobs = ["strategy", "aspect", "reuse", "dup_cap", "dup_override"]
+        if cfg.strategy == "boustrophedon":
+            knobs.append("band")
+        knob = rng.choice(knobs)
+        if knob == "strategy":
+            strat = rng.choice(self.strategy_names)
+            band = cfg.band if strat == "boustrophedon" \
+                else MappingConfig.band
+            return replace(cfg, strategy=strat, band=band)
+        if knob == "aspect":
+            return replace(cfg, aspect=rng.choice(self.aspects))
+        if knob == "reuse":
+            return replace(cfg, reuse=rng.choice(self.reuses))
+        if knob == "dup_cap":
+            return replace(cfg, dup_cap=rng.choice(self.dup_caps))
+        if knob == "band":
+            return replace(cfg, band=rng.choice(self.bands))
+        # toggle one layer's duplication cap: halve it, or lift an
+        # existing override
+        name = rng.choice(self.conv_names)
+        overrides = dict(cfg.dup_overrides)
+        if name in overrides:
+            del overrides[name]
+        else:
+            overrides[name] = max(1, cfg.dup_cap // 2)
+        return replace(cfg, dup_overrides=tuple(sorted(overrides.items())))
+
+    # -- building ------------------------------------------------------------
+
+    def strategy(self, cfg: MappingConfig) -> PlacementStrategy:
+        by_band = self._strategies.setdefault(
+            cfg.band, strategies(self.cnn, band=cfg.band))
+        return by_band[cfg.strategy]
+
+    def build(self, cfg: MappingConfig) -> Optional[Built]:
+        try:
+            plan = plan_network(self.cnn, n_c=self.n_c, n_m=self.n_m,
+                                reuse=cfg.reuse, dup_cap=cfg.dup_cap,
+                                dup_overrides=dict(cfg.dup_overrides))
+            rows, cols = mesh_shape_for(plan.total_tiles, cfg.aspect)
+            placement = self.strategy(cfg).place(plan, rows, cols)
+        except (ValueError, NotImplementedError):
+            return None
+        if validate_placement(plan, placement):
+            return None  # rendezvous-slack violation: infeasible
+        return Built(config=cfg, plan=plan, placement=placement)

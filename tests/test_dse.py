@@ -1,0 +1,302 @@
+"""Design-space exploration subsystem (repro/dse): placement strategies
+produce valid/deterministic unit-step curves, the search converges, the
+Pareto logic is correct, and — the acceptance property — DSE-found
+placements strictly lower routed byte-hops with no worse hotspot while
+the simulated network output stays bitwise-identical to the snake
+baseline (placement changes hops and energy, never math)."""
+import numpy as np
+import pytest
+
+from repro.configs.cnn import CNN_BENCHMARKS, CNNConfig, ConvLayer, FCLayer
+from repro.core.mapping import plan_network
+from repro.core.network import NetworkSimulator
+from repro.core.noc import MeshNoC
+from repro.dse.placements import (
+    band_serpentine_curve,
+    gilbert_curve,
+    network_links,
+    strategies,
+    validate_placement,
+)
+from repro.dse.report import dominates, pareto_front, validate_bitwise
+from repro.dse.search import Score, routed_traffic, search
+from repro.dse.space import DesignSpace, MappingConfig, mesh_shape_for
+
+
+def _toy_cnn() -> CNNConfig:
+    """Small but structurally rich: packing, channel splits, pooling, FC."""
+    return CNNConfig("toy", "cifar10", 8, (
+        ConvLayer("c0", 8, 8, 3, 32, k=3, pool_k=2, pool_s=2),
+        ConvLayer("c1", 4, 4, 32, 300, k=3),
+        ConvLayer("c2", 4, 4, 300, 64, k=3, pool_k=2, pool_s=2),
+        FCLayer("fc", 256, 10),
+    ))
+
+
+def _int_params(cnn, rng):
+    params = {}
+    for l in cnn.layers:
+        if isinstance(l, ConvLayer):
+            params[l.name] = rng.integers(
+                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
+        else:
+            params[l.name] = rng.integers(
+                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Curves
+# ---------------------------------------------------------------------------
+
+
+def _assert_unit_step_bijection(curve, rows, cols):
+    assert len(curve) == rows * cols
+    assert len(set(curve)) == rows * cols
+    for (r1, c1), (r2, c2) in zip(curve, curve[1:]):
+        assert abs(r1 - r2) + abs(c1 - c2) == 1, (rows, cols)
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 7), (2, 2), (3, 8), (6, 6),
+                                       (7, 7), (8, 14), (16, 16), (31, 31)])
+def test_gilbert_curve_unit_step(rows, cols):
+    # (odd-major x even-minor shapes take one diagonal step — the
+    # HilbertPlacement strategy widens those meshes away; see below)
+    _assert_unit_step_bijection(gilbert_curve(rows, cols), rows, cols)
+
+
+def test_hilbert_strategy_avoids_diagonal_parity():
+    """Shapes whose gilbert curve would take a diagonal step (odd major,
+    even minor) get widened to a strictly unit-step mesh."""
+    cnn = _toy_cnn()
+    plan = plan_network(cnn)
+    placement = strategies(cnn)["hilbert"].place(plan, rows=8, cols=13)
+    noc = placement.noc
+    assert not (max(noc.rows, noc.cols) % 2
+                and min(noc.rows, noc.cols) % 2 == 0)
+    _assert_unit_step_bijection(noc.order, noc.rows, noc.cols)
+
+
+@pytest.mark.parametrize("band", [1, 2, 3, 5])
+@pytest.mark.parametrize("rows,cols", [(4, 5), (7, 9), (10, 31)])
+def test_band_serpentine_unit_step(rows, cols, band):
+    _assert_unit_step_bijection(
+        band_serpentine_curve(rows, cols, band), rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# Strategies: valid tile ids, no overlaps, deterministic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["vgg11-cifar10", "resnet18-cifar10"])
+def test_strategies_valid_and_deterministic(model):
+    cnn = CNN_BENCHMARKS[model]()
+    plan = plan_network(cnn)
+    for name, strat in strategies(cnn).items():
+        p1, p2 = strat.place(plan), strat.place(plan)
+        assert p1.strategy == name
+        # deterministic: identical curve and mesh both times
+        assert (p1.noc.rows, p1.noc.cols) == (p2.noc.rows, p2.noc.cols)
+        assert p1.noc.order == p2.noc.order
+        # every tile id maps to a distinct in-mesh cell
+        noc = p1.noc
+        assert noc.num_tiles >= plan.total_tiles
+        cells = {noc.coord(t) for t in range(plan.total_tiles)}
+        assert len(cells) == plan.total_tiles
+        for r, c in cells:
+            assert 0 <= r < noc.rows and 0 <= c < noc.cols
+        # rendezvous-slack feasible (unit-step curves always are)
+        assert validate_placement(plan, p1) == []
+
+
+def test_validator_rejects_row_major_jumps():
+    """Plain row-major (non-serpentine) order teleports cols-1 hops at
+    each row end — a chain crossing it misses its rendezvous slot."""
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    plan = plan_network(cnn)
+    side = 31
+    assert side * side >= plan.total_tiles
+    row_major = tuple((i // side, i % side) for i in range(side * side))
+    placement = strategies(cnn)["snake"].place(plan)
+    bad = MeshNoC(rows=side, cols=side, order=row_major)
+    from repro.core.noc import Placement
+    bad_placement = Placement(bad, placement.block_start,
+                              placement.block_end, strategy="row-major")
+    assert validate_placement(plan, bad_placement) != []
+
+
+def test_mesh_shape_for_fits():
+    for total in (1, 5, 918, 1578):
+        for aspect in (0.25, 0.5, 1.0, 2.0, 4.0):
+            r, c = mesh_shape_for(total, aspect)
+            assert r * c >= total
+
+
+# ---------------------------------------------------------------------------
+# Route/hops memoization (satellite): no behavior change, cache hits
+# ---------------------------------------------------------------------------
+
+
+def test_route_and_hops_memoized():
+    noc = MeshNoC(6, 6)
+    fresh = MeshNoC(6, 6)
+    for a in range(36):
+        for b in range(0, 36, 5):
+            assert noc.hops(a, b) == len(noc.route(a, b)) - 1
+            assert noc.route(a, b) == fresh.route(a, b)
+    # second lookup returns the cached object itself
+    assert noc.route(3, 22) is noc.route(3, 22)
+    assert (3, 22) in noc._hops_cache or noc.hops(3, 22) is not None
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+
+def test_exhaustive_search_small_space():
+    cnn = _toy_cnn()
+    space = DesignSpace(cnn, aspects=(1.0,), reuses=(1,), bands=(2,))
+    res = search(cnn, space, budget=64)
+    assert res.mode == "exhaustive"
+    assert res.baseline.config.strategy == "snake"
+    # the baseline is among the candidates; best is never worse
+    assert res.best().score.total_byte_hops \
+        <= res.baseline.score.total_byte_hops
+
+
+def test_anneal_converges_on_toy_model():
+    """With the budget below the space size the seeded annealer runs —
+    and still finds the exhaustive optimum of the toy space."""
+    cnn = _toy_cnn()
+    full = DesignSpace(cnn)
+    assert full.size > 12
+    exhaustive = search(cnn, DesignSpace(cnn), budget=full.size + 1)
+    assert exhaustive.mode == "exhaustive"
+    best = exhaustive.best().score.total_byte_hops
+
+    annealed = search(cnn, DesignSpace(cnn), budget=24, seed=0)
+    assert annealed.mode == "anneal"
+    assert annealed.evaluations <= 24
+    # converged: the seeded walk reaches the global optimum with just
+    # over half the space evaluated
+    assert annealed.best().score.total_byte_hops == best
+
+
+def test_search_is_deterministic():
+    cnn = _toy_cnn()
+    r1 = search(cnn, DesignSpace(cnn), budget=12, seed=3)
+    r2 = search(cnn, DesignSpace(cnn), budget=12, seed=3)
+    assert [c.config for c in r1.candidates] \
+        == [c.config for c in r2.candidates]
+    assert r1.best().score == r2.best().score
+
+
+def test_dup_overrides_move_the_bottleneck():
+    cnn = _toy_cnn()
+    base = plan_network(cnn)
+    capped = plan_network(cnn, dup_overrides={"c0": 2})
+    i = [l.name for l in cnn.layers].index("c0")
+    assert capped.layers[i].duplication <= 2
+    assert capped.total_tiles < base.total_tiles
+    assert capped.initiation_interval >= base.initiation_interval
+    with pytest.raises(ValueError):
+        plan_network(cnn, dup_overrides={"nope": 2})
+    with pytest.raises(ValueError):
+        plan_network(cnn, dup_overrides={"c0": 0})
+
+
+# ---------------------------------------------------------------------------
+# Pareto
+# ---------------------------------------------------------------------------
+
+
+def _score(ce, inf_s, tiles, link, bh=0.0):
+    return Score(tops_per_w=ce, inf_per_s=inf_s, tiles=tiles,
+                 max_link_bytes=link, total_byte_hops=bh, energy_uj=1.0)
+
+
+def test_pareto_dominance():
+    a = _score(20.0, 1e5, 100, 1000)
+    b = _score(19.0, 1e5, 100, 1000)   # worse CE, equal elsewhere
+    c = _score(19.0, 2e5, 100, 1000)   # worse CE, better throughput
+    assert dominates(a, b) and not dominates(b, a)
+    assert not dominates(a, c) and not dominates(c, a)
+    assert not dominates(a, a)  # equal points don't dominate
+
+
+def test_pareto_front_correctness():
+    pts = [
+        _score(20.0, 1e5, 100, 1000),  # on the front
+        _score(19.0, 1e5, 100, 1000),  # dominated by [0]
+        _score(19.0, 2e5, 100, 1000),  # on the front (throughput)
+        _score(20.0, 1e5, 50, 2000),   # on the front (tiles)
+        _score(20.0, 1e5, 100, 1000),  # duplicate of [0]: dropped
+        _score(18.0, 1e5, 200, 3000),  # dominated by everything useful
+    ]
+    front = pareto_front(pts, key=lambda s: s)
+    assert front == [pts[0], pts[2], pts[3]]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: strictly fewer byte-hops, no worse hotspot, bitwise output
+# ---------------------------------------------------------------------------
+
+
+def _ci_space(cnn):
+    return DesignSpace(cnn,
+                       strategy_names=("snake", "hilbert", "boustrophedon"),
+                       aspects=(1.0,), reuses=(1,), bands=(3,))
+
+
+@pytest.mark.parametrize("model", ["vgg11-cifar10", "resnet18-cifar10"])
+def test_dse_beats_snake_bitwise(model):
+    cnn = CNN_BENCHMARKS[model]()
+    res = search(cnn, _ci_space(cnn), budget=16)
+    win, base = res.winner(), res.baseline
+    assert win.config.strategy != "snake"
+    assert win.score.total_byte_hops < base.score.total_byte_hops
+    assert win.score.max_link_bytes <= base.score.max_link_bytes
+    assert validate_bitwise(cnn, win, batch=2, seed=0)
+
+
+def test_injected_placement_bitwise_on_interpreter():
+    """The per-cycle interpreter (timing oracle: routed packets must hit
+    their schedule-table rendezvous slots) is bitwise-invariant under
+    every strategy's placement, and its own routed GROUP counters drop
+    under the locality curves."""
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    rng = np.random.default_rng(0)
+    params = _int_params(cnn, rng)
+    x = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+    plan = plan_network(cnn)
+    base = NetworkSimulator(cnn, params, backend="interp").run(x)
+    for name, strat in strategies(cnn).items():
+        placement = strat.place(plan)
+        res = NetworkSimulator(cnn, params, backend="interp",
+                               placement=placement).run(x)
+        np.testing.assert_array_equal(res.logits, base.logits)
+        assert res.counters.macs == base.counters.macs
+        if name == "hilbert":
+            assert res.traffic.byte_hops["group"] \
+                < base.traffic.byte_hops["group"]
+
+
+def test_routed_traffic_consistent_with_links():
+    """total byte-hops == sum over links of bytes * route length."""
+    cnn = _toy_cnn()
+    plan = plan_network(cnn)
+    placement = strategies(cnn)["hilbert"].place(plan)
+    total, max_link = routed_traffic(plan, placement, cnn)
+    expect = sum(ln.nbytes * placement.noc.hops(ln.src, ln.dst)
+                 for ln in network_links(plan, cnn))
+    assert total == pytest.approx(expect)
+    assert max_link > 0
+
+
+def test_mapping_config_hash_and_describe():
+    a = MappingConfig(strategy="hilbert", dup_overrides=(("c0", 2),))
+    b = MappingConfig(strategy="hilbert", dup_overrides=(("c0", 2),))
+    assert a == b and hash(a) == hash(b)
+    assert "hilbert" in a.describe() and "c0:2" in a.describe()

@@ -100,9 +100,95 @@ def test_resnet_constructs_with_residual_wiring():
         assert sched.tail.activation == (None if bare else "relu"), layer.name
 
 
-def test_imagenet_width_rejected_like_hardware():
-    """224-wide layers exceed the 128-entry schedule table (Tab. 3)."""
+def test_imagenet_width_compiles_as_strips():
+    """224-wide layers exceed the 128-entry schedule table (Tab. 3): a
+    single schedule still refuses to compile, and the network simulator
+    width-tiles such layers instead (per-strip tables, same chain)."""
+    from repro.core.instructions import TABLE_CAPACITY
+    from repro.core.schedule import compile_conv_block
+
+    with pytest.raises(ValueError):
+        compile_conv_block("too-wide", 224, 224, 3, 64, 3, 1, 1)
     cnn = CNN_BENCHMARKS["vgg16-imagenet"]()
     rng = np.random.default_rng(2)
-    with pytest.raises(ValueError):
-        NetworkSimulator(cnn, _int_params(cnn, rng))
+    sim = NetworkSimulator(cnn, _int_params(cnn, rng))
+    assert sim._strips  # every 224/112-wide layer compiled as strips
+    for li, strips in sim._strips.items():
+        layer = cnn.layers[li]
+        assert layer.w + 2 * layer.p > TABLE_CAPACITY
+        assert sim.schedules[li] is None
+        assert all(s.sched.wp <= TABLE_CAPACITY for s in strips)
+        # strips tile the output width exactly and in order
+        f_total = (layer.w + 2 * layer.p - layer.k + layer.s) // layer.s
+        assert strips[0].f0 == 0 and strips[-1].f1 == f_total
+        for a, b in zip(strips, strips[1:]):
+            assert a.f1 == b.f0
+
+
+def test_width_striping_bitwise_equals_whole_block():
+    """A block run as width strips (tiny capacity to force several
+    strips) produces the whole block's exact OFM, pooling included."""
+    from repro.core.schedule import compile_conv_block, compile_conv_strips
+    from repro.core.simulator import BlockSimulator
+
+    rng = np.random.default_rng(3)
+    h, w, c, m, k, s, p = 9, 21, 2, 3, 3, 2, 1
+    ifm = rng.integers(-4, 5, (2, h, w, c)).astype(np.float64)
+    wts = rng.integers(-4, 5, (k, k, c, m)).astype(np.float64)
+
+    whole = BlockSimulator(
+        compile_conv_block("whole", h, w, c, m, k, s, p), wts).run(ifm)
+
+    strips = compile_conv_strips("striped", h, w, c, m, k, s, p,
+                                 capacity=9)
+    assert len(strips) > 2
+    padded = np.zeros((2, h + 2 * p, w + 2 * p, c))
+    padded[:, p:p + h, p:p + w] = ifm
+    parts = [BlockSimulator(st.sched, wts).run(padded[:, :, st.lo:st.hi])
+             for st in strips]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=2), whole)
+
+
+def test_width_striping_pooled_block():
+    """Striping composes with the tail max-pool (strip cuts land on
+    pool-stride boundaries)."""
+    from repro.core.schedule import compile_conv_block, compile_conv_strips
+    from repro.core.simulator import BlockSimulator
+
+    rng = np.random.default_rng(4)
+    h, w, c, m = 8, 16, 2, 3
+    ifm = rng.integers(-4, 5, (h, w, c)).astype(np.float64)
+    wts = rng.integers(-4, 5, (3, 3, c, m)).astype(np.float64)
+    whole = BlockSimulator(
+        compile_conv_block("w", h, w, c, m, 3, 1, 1, pool_k=2, pool_s=2),
+        wts).run(ifm)
+    strips = compile_conv_strips("s", h, w, c, m, 3, 1, 1,
+                                 pool_k=2, pool_s=2, capacity=10)
+    assert len(strips) > 1
+    padded = np.zeros((h + 2, w + 2, c))
+    padded[1:1 + h, 1:1 + w] = ifm
+    parts = [BlockSimulator(st.sched, wts).run(padded[:, st.lo:st.hi])
+             for st in strips]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1), whole)
+
+
+@pytest.mark.slow
+def test_resnet50_end_to_end_matches_jax():
+    """ResNet-50 (ImageNet, 224x224) through the whole pipeline: the
+    width-striped stem, bottleneck residuals (identity + projection
+    shortcuts), global average pooling and the FC head — matching the
+    jax reference forward (allclose: activations overflow exact f64
+    integer range through 53 layers; B=2 keeps gemm kernels uniform)."""
+    rng = np.random.default_rng(5)
+    cnn = CNN_BENCHMARKS["resnet50-imagenet"]()
+    params = _int_params(cnn, rng)
+    x = rng.integers(0, 2, (2, 224, 224, 3)).astype(np.float64)
+    sim = NetworkSimulator(cnn, params, dup_cap=128, backend="trace")
+    assert 0 in sim._strips and len(sim._strips) == 1  # the stem only
+    res = sim.run(x)
+    ref = _jax_reference(cnn, params, x)
+    assert res.logits.shape == ref.shape == (2, 1000)
+    np.testing.assert_allclose(res.logits, ref, rtol=1e-9)
+    # bottleneck shortcut streams really moved over the mesh
+    assert res.traffic.byte_hops["residual"] > 0
+    assert res.traffic.byte_hops["ofm"] > 0
