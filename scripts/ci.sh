@@ -12,6 +12,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --check-regress
+# bounded streaming smoke: 4 fixed-seed vgg11 frames through the
+# pipelined executor; exits non-zero on any per-frame bitwise mismatch
+# vs the sequential trace run or a measured-vs-analytic II disagreement
+python -m benchmarks.run --stream-smoke
 # bounded mapping-DSE smoke: tiny fixed-seed space, winners bitwise-
 # validated against the snake baseline (<30 s; exits non-zero on mismatch)
 python -m repro.dse --smoke --seed 0

@@ -28,6 +28,24 @@ Two execution backends share the placement, schedules and transport:
 Batching: the IFM batch rides each routed packet as ``(B, C)`` lanes, so
 one simulated pass serves a whole batch (see ``core/simulator.py``).
 
+Stream computing (``streaming=True`` + ``backend="trace"``): the paper's
+headline throughput numbers (Tab. 4, Fig. 7) come from *pipelined*
+inference — successive input frames overlap across the layer pipeline,
+so steady-state throughput is bound by the slowest stage's initiation
+interval, not the end-to-end latency.  :meth:`NetworkSimulator.run_stream`
+executes that mode: each layer (plus its projection shortcut) is one
+pipeline stage, frames advance in wavefront order (stage *k* consumes
+frame *t* while stage *k+1* consumes frame *t-1*), inter-stage OFM
+hand-off flows through the routed transport with per-frame
+``TrafficCounters``, and residual shortcuts are buffered across the
+pipeline skew (the paper's FIFO forwarding).  The executor *measures*
+the steady-state initiation interval from the simulated stage timeline
+— the per-stage occupancies come from the compiled schedules'
+:class:`~repro.core.schedule.StageHandoff` metadata, and the measured
+II must emerge equal to ``plan_network``'s analytic slowest-stage bound
+(cross-checked in ``tests/test_streaming.py`` and the ``stream_*``
+benchmark rows).
+
 Functional notes:
 
 * weight-duplicated copies share weights and split the pixel stream for
@@ -52,12 +70,14 @@ Functional notes:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.cnn import CNNConfig, ConvLayer, FCLayer
+from repro.core.energy import STEP_CLOCK_HZ
 from repro.core.instructions import TABLE_CAPACITY
 from repro.core.mapping import NetworkPlan, plan_network
 from repro.core.noc import Placement, block_spans, place_network
@@ -86,6 +106,65 @@ class NetworkSimResult:
     traffic: TrafficCounters      # routed byte-hops per traffic class
 
 
+@dataclass(frozen=True)
+class _Stage:
+    """One stage of the layer pipeline: a conv layer (plus its projection
+    shortcut, which runs concurrently on its own placed tiles) or an FC
+    layer.  ``occupancy`` is the stage's initiation interval — cycles
+    between successive frames entering it, its output-pixel stream split
+    over the weight-duplicated copies; ``latency`` is first-input to
+    last-output of one frame (stream occupancy + chain fill/drain)."""
+
+    li: int                    # main layer index
+    sc_li: Optional[int]       # projection shortcut folded into this stage
+    kind: str                  # "conv" | "fc"
+    prev_li: Optional[int]     # main layer index of the upstream stage
+    occupancy: int
+    latency: int
+
+
+@dataclass
+class StreamResult:
+    """Measured pipelined (stream-computing) execution of ``T`` frames.
+
+    ``start``/``finish`` are the simulated stage timeline: cycle each
+    stage initiated / completed each frame, from which the steady-state
+    initiation interval is *measured* (``finish`` deltas at the exit
+    stage) rather than asserted.  With back-to-back arrivals the measured
+    II is throughput-bound (the slowest stage); spaced arrivals make it
+    arrival-bound — the closed-loop serve front-end uses that."""
+
+    logits: np.ndarray                    # (T, classes), frame-indexed
+    frame_counters: List[SimCounters]     # per-frame tile events
+    frame_traffic: List[TrafficCounters]  # per-frame routed traffic
+    arrivals: np.ndarray                  # (T,) frame arrival cycles
+    start: np.ndarray                     # (T, S) stage initiation cycles
+    finish: np.ndarray                    # (T, S) stage completion cycles
+    occupancy: Tuple[int, ...]            # per-stage initiation interval
+    measured_ii: int                      # steady-state exit-to-exit cycles
+    analytic_ii: int                      # plan_network slowest-stage bound
+    fill_latency: int                     # frame 0: arrival -> pipeline exit
+    residual_fifo_depth: int              # max shortcut frames buffered
+
+    @property
+    def total_cycles(self) -> int:
+        return int(self.finish[-1, -1])
+
+    @property
+    def frame_latency(self) -> np.ndarray:
+        """Per-frame closed-loop latency: arrival -> pipeline exit."""
+        return self.finish[:, -1] - self.arrivals
+
+    @property
+    def drain_latency(self) -> int:
+        """Cycles to empty the pipeline after the last frame initiates."""
+        return int(self.finish[-1, -1] - self.start[-1, 0])
+
+    def inferences_per_s(self, clock_hz: float = STEP_CLOCK_HZ) -> float:
+        """Measured steady-state throughput at the Tab. 3 step clock."""
+        return clock_hz / self.measured_ii
+
+
 def _is_shortcut(layer) -> bool:
     """The config convention for ResNet projection shortcuts."""
     return isinstance(layer, ConvLayer) and layer.name.endswith("_sc")
@@ -98,7 +177,7 @@ class NetworkSimulator:
     def __init__(self, cnn: CNNConfig, params: Dict[str, np.ndarray],
                  n_c: int = 256, n_m: int = 256, reuse: int = 1,
                  dup_cap: int = 64, backend: str = "interp",
-                 trace_jit: bool = False,
+                 trace_jit: bool = False, streaming: bool = False,
                  placement: Optional[Placement] = None,
                  dup_overrides: Optional[Dict[str, int]] = None):
         """params: layer name -> (K, K, C, M) conv kernel or (C_in, C_out)
@@ -117,6 +196,15 @@ class NetworkSimulator:
             raise ValueError(
                 "trace_jit=True requires backend='trace' (the default "
                 "backend is the per-cycle interpreter)")
+        if streaming and backend != "trace":
+            raise ValueError(
+                "streaming=True requires backend='trace' (the pipelined "
+                "executor advances compiled per-stage trace plans)")
+        if streaming and trace_jit:
+            raise ValueError(
+                "streaming=True is incompatible with trace_jit=True: the "
+                "float32 jitted path is allclose-only, which would break "
+                "run_stream's per-frame bitwise-vs-sequential guarantee")
         # residual wiring follows the configs/cnn.py naming convention the
         # jax reference uses (save at `*_a`, add at `residual_from`,
         # project through an immediately-following `*_sc`) — reject
@@ -154,6 +242,7 @@ class NetworkSimulator:
         self.n_c, self.n_m = n_c, n_m
         self.backend = backend
         self.trace_jit = trace_jit
+        self.streaming = streaming
         self.plan: NetworkPlan = plan_network(cnn, n_c=n_c, n_m=n_m,
                                               reuse=reuse, dup_cap=dup_cap,
                                               dup_overrides=dup_overrides)
@@ -206,6 +295,9 @@ class NetworkSimulator:
             for li, strips in self._strips.items():
                 for si, strip in enumerate(strips):
                     self._trace_plans[li, si] = compile_trace(strip.sched)
+        # the layer pipeline as explicit stages — the sequential run walks
+        # them one frame at a time, the streaming executor overlaps frames
+        self._stages: Tuple[_Stage, ...] = self._build_stages()
 
     def _engine(self, li: int, si: int, sched: BlockSchedule,
                 transport: NoCTransport, counters: SimCounters):
@@ -249,6 +341,132 @@ class NetworkSimulator:
         ]
         return np.concatenate(outs, axis=2)
 
+    # -- the layer pipeline as stages ---------------------------------------
+
+    def _stage_timing(self, li: int) -> Tuple[int, int]:
+        """(occupancy, latency) of one layer's stage in step-clock cycles.
+
+        Conv: the compiled schedules' hand-off metadata (summed over
+        width strips, which run back to back on the same chain), with
+        the pixel stream split over the weight-duplicated copies — so
+        occupancy is exactly the paper's per-stage initiation-interval
+        bound.  FC: the grid is fully pipelined (a new input vector can
+        enter every cycle); its psum-chain depth is pure fill latency.
+        """
+        lp = self.plan.layers[li]
+        if lp.kind == "fc":
+            return 1, max(1, lp.chain_len)
+        strips = self._strips.get(li)
+        hands = ([s.sched.handoff for s in strips] if strips is not None
+                 else [self.schedules[li].handoff])
+        dup = lp.duplication
+        occ = max(1, math.ceil(sum(h.out_elems for h in hands) / dup))
+        stream = math.ceil(sum(h.stream_len for h in hands) / dup)
+        return occ, max(occ, stream) + max(h.drain for h in hands)
+
+    def _build_stages(self) -> Tuple[_Stage, ...]:
+        layers = self.cnn.layers
+        stages: List[_Stage] = []
+        prev_li: Optional[int] = None
+        li = 0
+        while li < len(layers):
+            layer = layers[li]
+            step = 1
+            if isinstance(layer, ConvLayer):
+                sc_li = None
+                if layer.residual_from is not None and li + 1 < len(layers) \
+                        and _is_shortcut(layers[li + 1]):
+                    sc_li = li + 1  # projection runs concurrently in-stage
+                    step = 2
+                occ, lat = self._stage_timing(li)
+                if sc_li is not None:
+                    occ_sc, lat_sc = self._stage_timing(sc_li)
+                    occ, lat = max(occ, occ_sc), max(lat, lat_sc)
+                stages.append(_Stage(li=li, sc_li=sc_li, kind="conv",
+                                     prev_li=prev_li, occupancy=occ,
+                                     latency=lat))
+            else:
+                occ, lat = self._stage_timing(li)
+                stages.append(_Stage(li=li, sc_li=None, kind="fc",
+                                     prev_li=prev_li, occupancy=occ,
+                                     latency=lat))
+            prev_li = li
+            li += step
+        return tuple(stages)
+
+    def _exec_stage(self, stage: _Stage, x: np.ndarray,
+                    saved: Dict[str, Tuple[np.ndarray, Optional[int]]],
+                    counters: SimCounters,
+                    traffic: TrafficCounters) -> np.ndarray:
+        """Execute one pipeline stage on one (possibly batched) value.
+
+        Shared verbatim by the sequential :meth:`run` and the streaming
+        :meth:`run_stream`, so per-frame math and per-frame routed
+        traffic are identical on both paths by construction.  ``saved``
+        holds residual block inputs (name -> (value, producing layer))
+        between the ``*_a`` save and the shortcut add; the streaming
+        executor keeps one such dict per in-flight frame — the paper's
+        FIFO forwarding across the pipeline skew."""
+        placement = self.placement
+        noc = placement.noc
+        li = stage.li
+        layer = self.cnn.layers[li]
+        transport = NoCTransport(noc, base=placement.block_start[li],
+                                 counters=traffic)
+        if stage.kind == "fc":
+            assert isinstance(layer, FCLayer)
+            if x.ndim == 4:
+                if self.cnn.name.startswith("resnet"):
+                    x = x.mean(axis=(1, 2))  # global average pool
+                else:
+                    x = x.reshape(x.shape[0], -1)  # VGG flattens
+            act = "relu" if li < len(self.cnn.layers) - 1 else None
+            return simulate_fc(
+                x, np.asarray(self.params[layer.name], np.float64),
+                self.n_c, self.n_m, activation=act,
+                counters=counters, transport=transport)
+
+        mesh_root = NoCTransport(noc, base=0, counters=traffic)
+        if layer.name.endswith("_a"):
+            saved[layer.name] = (x, stage.prev_li)  # residual save (Fig. 2)
+        y = self._run_layer(li, transport, counters, x)
+        if layer.residual_from is not None:
+            block_in, block_in_src = saved.pop(layer.residual_from)
+            if stage.sc_li is not None:
+                # projection shortcut: its own placed block, driven by
+                # the saved block input
+                sc_li = stage.sc_li
+                sc_tr = NoCTransport(noc, base=placement.block_start[sc_li],
+                                     counters=traffic)
+                self._record_residual(mesh_root, block_in_src,
+                                      placement.block_start[sc_li], block_in)
+                shortcut = self._run_layer(sc_li, sc_tr, counters, block_in)
+                lp = self.plan.layers[sc_li]
+                mesh_root.record(placement.block_end[sc_li],
+                                 placement.block_end[li], RESIDUAL,
+                                 lp.out_pixels * lp.c_out)
+            else:
+                # identity shortcut streams straight to the add
+                self._record_residual(mesh_root, block_in_src,
+                                      placement.block_end[li], block_in)
+                shortcut = block_in
+            # tail adder + activation after the shortcut join
+            y = y + shortcut
+            y = np.maximum(y, 0.0)
+            counters.act_ops += y.shape[1] * y.shape[2] * y.shape[3]
+        return y
+
+    def _record_ofm(self, src_li: int, dst_li: int,
+                    traffic: TrafficCounters) -> None:
+        """OFM tail -> next consumer's head over the routed mesh link
+        (same accounting as ``noc.inter_block_byte_hops``)."""
+        placement = self.placement
+        lp = self.plan.layers[src_li]
+        nbytes = lp.out_pixels * lp.c_out  # 8b activations
+        NoCTransport(placement.noc, base=0, counters=traffic).record(
+            placement.block_end[src_li], placement.block_start[dst_li],
+            OFM, nbytes)
+
     def run(self, images: np.ndarray) -> NetworkSimResult:
         """images: (B, H, W, 3) or (H, W, 3) -> logits (B, classes)."""
         squeeze = images.ndim == 3
@@ -257,82 +475,105 @@ class NetworkSimulator:
             x = x[None]
         counters = SimCounters()
         traffic = TrafficCounters()
-        placement = self.placement
-        noc = placement.noc
-        noc.link_traffic.clear()  # per-run link stats (hotspot metrics)
-        mesh_root = NoCTransport(noc, base=0, counters=traffic)
-        layers = list(self.cnn.layers)
-
-        block_in: Optional[np.ndarray] = None  # residual save (Fig. 2 SC)
-        block_in_src: Optional[int] = None     # layer idx that produced it
-        prev_src: Optional[int] = None         # layer idx that produced x
-        li = 0
-        while li < len(layers):
-            layer = layers[li]
-            transport = NoCTransport(noc, base=placement.block_start[li],
-                                     counters=traffic)
-            step = 1
-            if isinstance(layer, ConvLayer):
-                if layer.name.endswith("_a"):
-                    block_in, block_in_src = x, prev_src
-                y = self._run_layer(li, transport, counters, x)
-                if layer.residual_from is not None:
-                    nxt = layers[li + 1] if li + 1 < len(layers) else None
-                    if _is_shortcut(nxt):
-                        # projection shortcut: its own placed block,
-                        # driven by the saved block input
-                        sc_tr = NoCTransport(
-                            noc, base=placement.block_start[li + 1],
-                            counters=traffic)
-                        self._record_residual(
-                            mesh_root, block_in_src,
-                            placement.block_start[li + 1], block_in)
-                        shortcut = self._run_layer(li + 1, sc_tr,
-                                                   counters, block_in)
-                        lp = self.plan.layers[li + 1]
-                        mesh_root.record(
-                            placement.block_end[li + 1],
-                            placement.block_end[li], RESIDUAL,
-                            lp.out_pixels * lp.c_out)
-                        step = 2
-                    else:
-                        # identity shortcut streams straight to the add
-                        self._record_residual(
-                            mesh_root, block_in_src,
-                            placement.block_end[li], block_in)
-                        shortcut = block_in
-                    # tail adder + activation after the shortcut join
-                    y = y + shortcut
-                    y = np.maximum(y, 0.0)
-                    counters.act_ops += (y.shape[1] * y.shape[2]
-                                         * y.shape[3])
-                x = y
-            else:
-                assert isinstance(layer, FCLayer)
-                if x.ndim == 4:
-                    if self.cnn.name.startswith("resnet"):
-                        x = x.mean(axis=(1, 2))  # global average pool
-                    else:
-                        x = x.reshape(x.shape[0], -1)  # VGG flattens
-                act = "relu" if li < len(layers) - 1 else None
-                x = simulate_fc(
-                    x, np.asarray(self.params[layer.name], np.float64),
-                    self.n_c, self.n_m, activation=act,
-                    counters=counters, transport=transport)
-
-            prev_src = li
-            li += step
-            if li < len(layers):
-                # OFM tail -> next consumer's head over the routed mesh
-                # link (same accounting as noc.inter_block_byte_hops)
-                lp = self.plan.layers[prev_src]
-                nbytes = lp.out_pixels * lp.c_out  # 8b activations
-                mesh_root.record(placement.block_end[prev_src],
-                                 placement.block_start[li], OFM, nbytes)
-
+        self.placement.noc.link_traffic.clear()  # per-run link stats
+        saved: Dict[str, Tuple[np.ndarray, Optional[int]]] = {}
+        for s, stage in enumerate(self._stages):
+            x = self._exec_stage(stage, x, saved, counters, traffic)
+            if s + 1 < len(self._stages):
+                self._record_ofm(stage.li, self._stages[s + 1].li, traffic)
         return NetworkSimResult(
             logits=x[0] if squeeze else x,
             counters=counters, traffic=traffic)
+
+    def run_stream(self, frames: np.ndarray,
+                   arrivals: Optional[np.ndarray] = None) -> StreamResult:
+        """Pipelined stream computing: overlap ``T`` frames across the
+        layer pipeline and *measure* the steady-state initiation
+        interval from the simulated stage timeline.
+
+        ``frames``: (T, H, W, 3) — each frame is one inference (the
+        serving direction streams frames, not batches).  ``arrivals``
+        optionally gives each frame's arrival cycle (non-decreasing; the
+        request-queue front-end in ``runtime/serve_loop.py`` uses it);
+        by default all frames are ready at cycle 0 and the pipeline runs
+        back-pressure-limited, so the measured II is the slowest stage's
+        initiation interval — the quantity ``plan_network`` bounds
+        analytically (cross-checked via :attr:`StreamResult.analytic_ii`).
+
+        Per-frame OFMs are bitwise-equal to the sequential trace run of
+        the same frames (the stages execute the same compiled plans in
+        the same association order), and each frame carries its own
+        ``SimCounters``/``TrafficCounters``.
+        """
+        if not self.streaming:
+            raise ValueError(
+                "run_stream requires NetworkSimulator(..., "
+                "backend='trace', streaming=True)")
+        frames = np.asarray(frames, np.float64)
+        if frames.ndim != 4:
+            raise ValueError(f"frames must be (T, H, W, C): {frames.shape}")
+        t_n = frames.shape[0]
+        if t_n < 2:
+            raise ValueError(
+                "a steady-state initiation interval needs >= 2 frames")
+        stages = self._stages
+        s_n = len(stages)
+        if arrivals is None:
+            arr = np.zeros(t_n, np.int64)
+        else:
+            arr = np.asarray(arrivals, np.int64)
+            if arr.shape != (t_n,):
+                raise ValueError(
+                    f"arrivals must be one cycle per frame: {arr.shape}")
+            if not (np.diff(arr) >= 0).all():
+                raise ValueError("arrivals must be in FIFO order")
+        occ = [st.occupancy for st in stages]
+        lat = [st.latency for st in stages]
+        self.placement.noc.link_traffic.clear()  # per-stream link stats
+        counters = [SimCounters() for _ in range(t_n)]
+        traffic = [TrafficCounters() for _ in range(t_n)]
+        saved: List[Dict[str, Tuple[np.ndarray, Optional[int]]]] = [
+            {} for _ in range(t_n)]
+        inflight: Dict[int, np.ndarray] = {}  # frame -> inter-stage value
+        logits: List[Optional[np.ndarray]] = [None] * t_n
+        start = np.zeros((t_n, s_n), np.int64)
+        finish = np.zeros((t_n, s_n), np.int64)
+        fifo_depth = 0
+        for step in range(t_n + s_n - 1):
+            # wavefront: deeper stages hold older frames (t = step - k)
+            for k in range(s_n - 1, -1, -1):
+                t = step - k
+                if not 0 <= t < t_n:
+                    continue
+                stage = stages[k]
+                x = inflight.pop(t) if k else frames[t:t + 1]
+                y = self._exec_stage(stage, x, saved[t], counters[t],
+                                     traffic[t])
+                # stage timeline: a stage initiates frame t when its
+                # input is ready AND one initiation interval has passed
+                # since it accepted frame t-1
+                ready = finish[t, k - 1] if k else arr[t]
+                init = ready if t == 0 \
+                    else max(ready, start[t - 1, k] + occ[k])
+                start[t, k] = init
+                finish[t, k] = init + lat[k]
+                if k + 1 < s_n:
+                    self._record_ofm(stage.li, stages[k + 1].li, traffic[t])
+                    inflight[t] = y
+                else:
+                    logits[t] = y[0]
+            # shortcut FIFO occupancy across all in-flight frames
+            fifo_depth = max(fifo_depth, sum(len(d) for d in saved))
+        assert not inflight and all(lg is not None for lg in logits)
+        exits = finish[:, -1]
+        return StreamResult(
+            logits=np.stack(logits), frame_counters=counters,
+            frame_traffic=traffic, arrivals=arr, start=start, finish=finish,
+            occupancy=tuple(occ),
+            measured_ii=int(exits[-1] - exits[-2]),
+            analytic_ii=self.plan.initiation_interval,
+            fill_latency=int(exits[0] - arr[0]),
+            residual_fifo_depth=fifo_depth)
 
     def _record_residual(self, mesh_root: NoCTransport,
                          src_layer: Optional[int], dst_tile: int,

@@ -116,6 +116,22 @@ class TailProgram:
 
 
 @dataclass(frozen=True)
+class StageHandoff:
+    """Inter-layer stream hand-off metadata of one compiled block — what
+    the pipelined streaming executor (``core/network.py``) needs to
+    advance overlapping frames through the layer pipeline: how many OFM
+    pixels the block emits per frame, how long its padded pixel stream
+    occupies the chain, and the chain fill/drain margin (one cycle per
+    tile in, one out).  OFM *byte* volume is accounted by the network
+    simulator from the layer plan (``LayerPlan.out_pixels * c_out``),
+    which also covers FC stages that have no compiled schedule."""
+
+    out_elems: int     # E*F output pixels emitted per frame (pre-pool)
+    stream_len: int    # padded pixel stream occupancy, Hp*Wp cycles
+    drain: int         # chain fill/drain margin, 2 * chain_len cycles
+
+
+@dataclass(frozen=True)
 class BlockSchedule:
     layer_name: str
     k: int
@@ -158,6 +174,14 @@ class BlockSchedule:
     @property
     def period(self) -> int:
         return self.wp
+
+    @property
+    def handoff(self) -> StageHandoff:
+        """Stream hand-off metadata for the pipelined executor (strip
+        schedules each carry their own; the network stage sums them)."""
+        return StageHandoff(out_elems=self.e * self.f,
+                            stream_len=self.hp * self.wp,
+                            drain=2 * self.chain_len)
 
 
 def _mac_phases(j0: int, pack: int, stride: int, f: int) -> List[int]:

@@ -80,6 +80,51 @@ _ACT = {
 }
 
 
+#: the gemm row-block size at which OpenBLAS's k-reduction order is
+#: row-position invariant (measured on this box across N and K <= N_c):
+#: the dgemm microkernel processes rows in blocks of 4 — a single row
+#: is forwarded to a gemv kernel outright, and a 1-3-row *remainder*
+#: block (whether the whole operand or the tail of a taller one) hits
+#: edge kernels that reorder the k-reduction for some output widths
+#: (e.g. the 10-class FC head).  Any row inside a full 4-row block gets
+#: the same bits regardless of the operand's total row count.
+_GEMM_BLOCK = 4
+
+
+def gemm_rows(a: np.ndarray, w: np.ndarray,
+              out: Optional[np.ndarray] = None) -> np.ndarray:
+    """2-D matrix product with a row-position-invariant reduction order.
+
+    Everything in the simulator compares row-for-row across batch
+    shapes — ``B=1`` vs ``B>=2``, streaming frames vs batched runs, the
+    interpreter's per-pixel products vs the trace backend's whole-block
+    gemm — so a given row's product must be bitwise-identical no matter
+    how many other rows ride along.  BLAS breaks that for remainder row
+    blocks (see ``_GEMM_BLOCK``); operands are padded to a multiple of
+    the block size (duplicating the last row) so every row lands in a
+    full block.  At the simulator's contraction widths (channel slices
+    never exceed ``N_c`` = 256) this makes every per-row comparison
+    exact.
+    """
+    m = a.shape[0]
+    rem = m % _GEMM_BLOCK
+    if rem == 0:
+        return np.matmul(a, w, out=out)
+    # only the 1-3-row remainder needs padding: full blocks already get
+    # canonical bits, so compute them in place and pad just the tail
+    split = m - rem
+    tail = a[split:]
+    tail_prod = np.matmul(
+        np.concatenate([tail, tail[-1:].repeat(_GEMM_BLOCK - rem, axis=0)]),
+        w)[:rem]
+    if out is None:
+        out = np.empty((m, w.shape[1]), np.result_type(a, w))
+    if split:
+        np.matmul(a[:split], w, out=out[:split])
+    out[split:] = tail_prod
+    return out
+
+
 class _Tile:
     def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int,
                  c_in: int):
@@ -162,7 +207,7 @@ class BlockSimulator:
             if needs_cslice:
                 px = px[:, c_lo:c_hi]
             if self.cim_spec is None:
-                acc += px @ w_tap
+                acc += gemm_rows(px, w_tap)
             else:
                 acc += np.asarray(
                     cim_linear_reference(
@@ -188,6 +233,14 @@ class BlockSimulator:
         padded = np.zeros((b, s.hp, s.wp, s.c_in), np.float64)
         padded[:, s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
         stream = padded.reshape(b, -1, s.c_in)  # raster order, batched
+        # pad the batch lanes once to the gemm row-block multiple so the
+        # per-cycle MACs stay on gemm_rows' plain-matmul fast path (the
+        # extra lanes are discarded below; the real lanes' bits are
+        # unchanged — that is gemm_rows' row-position invariance)
+        b_run = b + (-b % _GEMM_BLOCK)
+        if b_run != b:
+            stream = np.concatenate(
+                [stream, stream[-1:].repeat(b_run - b, axis=0)])
         n_pix = stream.shape[1]
         chain = len(self.tiles)
         total_cycles = n_pix + chain + chain  # drain margin
@@ -253,13 +306,15 @@ class BlockSimulator:
                 elif prog.is_block_tail:
                     self._emit(acc)
 
-        out = np.stack(self._outputs, axis=1).reshape(b, s.e, s.f, s.c_out)
+        out = np.stack(self._outputs, axis=1).reshape(
+            b_run, s.e, s.f, s.c_out)
         if self.sched.tail.pool_s:
             ps = self.sched.tail.pool_s
             assert s.e % ps == 0 and s.f % ps == 0, (
                 f"pooling {ps} does not tile the {s.e}x{s.f} OFM")
             out = np.stack(self._pooled, axis=1).reshape(
-                b, s.e // ps, s.f // ps, s.c_out)
+                b_run, s.e // ps, s.f // ps, s.c_out)
+        out = out[:b]
         return out[0] if squeeze else out
 
     # -- tail unit (M-type program) --------------------------------------------
@@ -330,7 +385,7 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
             k0, k1 = i * n_c, min((i + 1) * n_c, c_in)
             acc = np.zeros((x.shape[0], n1 - n0), np.float64)
             if instr.has(FROM_PE):
-                acc += x[:, k0:k1] @ w[k0:k1, n0:n1]
+                acc += gemm_rows(x[:, k0:k1], w[k0:k1, n0:n1])
                 cnt.macs += (k1 - k0) * (n1 - n0)
             if instr.has(SUM_ADD) and i > 0:
                 acc += psum

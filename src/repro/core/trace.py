@@ -31,13 +31,13 @@ become one ``(B*E*F, C) @ (C, M)`` gemm (same sequential k-reduction
 per output element), and the psum/group-sum adds keep their exact
 operand order.  ``tests/test_trace.py`` asserts OFM, ``SimCounters``
 and ``TrafficCounters`` equality across every ``CNN_BENCHMARKS`` conv
-geometry; the interpreter stays the oracle.  One BLAS dispatch caveat:
-at ``B == 1`` the interpreter's per-pixel product is a ``(1, C)`` row —
-OpenBLAS routes it to a gemv kernel whose k-reduction order can differ
-from the gemm row kernel — so for unbatched runs the guarantee is
-bitwise for exactly-representable arithmetic (the test regime: small
-integer data) and allclose otherwise; any ``B >= 2`` is uniformly
-bitwise.
+geometry; the interpreter stays the oracle.  Every matrix product goes
+through :func:`~repro.core.simulator.gemm_rows`, which pads remainder
+row blocks so BLAS's k-reduction order is row-position invariant
+(OpenBLAS would otherwise hand short operands to gemv/edge kernels
+with a different order) — so the guarantee is bitwise at *every* batch
+size, including unbatched ``B == 1`` runs with inexact float data, and
+a sample's bits never depend on its batch neighbours.
 
 ``SimCounters``/``TrafficCounters`` are derived analytically from the
 plan — hop counts still come from :meth:`MeshNoC.route` via the shared
@@ -53,7 +53,7 @@ import numpy as np
 
 from repro.core.instructions import BUF_PUSH, FROM_PE, Instruction, Port
 from repro.core.schedule import BlockSchedule
-from repro.core.simulator import SimCounters, _standalone_transport
+from repro.core.simulator import SimCounters, _standalone_transport, gemm_rows
 from repro.core.transport import CHAIN, GROUP, PSUM_BYTES, NoCTransport
 
 
@@ -130,10 +130,11 @@ def compile_trace(sched: BlockSchedule) -> TracePlan:
         ))
     gs = s.group_size
     segments = tuple((g * gs, (g + 1) * gs) for g in range(s.k))
+    hand = s.handoff
     return TracePlan(
-        sched=s, tiles=tuple(tiles), segments=segments, fires=e * f,
-        macs_per_fire=macs_per_fire, n_pix=hp * wp,
-        drain_cycles=hp * wp + 2 * s.chain_len,
+        sched=s, tiles=tuple(tiles), segments=segments, fires=hand.out_elems,
+        macs_per_fire=macs_per_fire, n_pix=hand.stream_len,
+        drain_cycles=hand.stream_len + hand.drain,
     )
 
 
@@ -209,7 +210,7 @@ class TraceExecutor:
                     patch = stream[:, tt.gather[d]]
                     if tt.c_lo != 0 or tt.c_hi != s.c_in:
                         patch = patch[:, :, tt.c_lo:tt.c_hi]
-                    np.matmul(patch.reshape(b * ef, -1), w[d], out=prod)
+                    gemm_rows(patch.reshape(b * ef, -1), w[d], out=prod)
                     m += prod
                 m = m.reshape(b, ef, s.c_out)
                 # chain: own MAC + west psum (acc = mac; acc += west)

@@ -148,7 +148,12 @@ def _residual_links(plan: NetworkPlan, cnn: CNNConfig,
                            lp_sc.out_pixels * lp_sc.c_out)
             elif save_src is not None:
                 yield Link(ends[save_src], ends[li], RESIDUAL, saved_bytes)
-        prev = li
+        if not layer.name.endswith("_sc"):
+            # a projection runs beside its target block; what the next
+            # *_a layer saves is the value leaving the *main* block's
+            # tail (after the add) — mirroring _Stage.prev_li in
+            # core/network.py, which never points at an _sc layer
+            prev = li
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,19 @@
+"""Shared test helpers for the Domino simulator suites."""
+import numpy as np
+
+from repro.configs.cnn import ConvLayer
+
+
+def int_params(cnn, rng):
+    """Small-integer float64 params per layer — the exact-arithmetic
+    regime the bitwise simulator tests run in (shared by the trace,
+    DSE and streaming suites so the convention lives in one place)."""
+    params = {}
+    for l in cnn.layers:
+        if isinstance(l, ConvLayer):
+            params[l.name] = rng.integers(
+                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
+        else:
+            params[l.name] = rng.integers(
+                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
+    return params

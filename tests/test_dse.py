@@ -6,6 +6,7 @@ the simulated network output stays bitwise-identical to the snake
 baseline (placement changes hops and energy, never math)."""
 import numpy as np
 import pytest
+from conftest import int_params as _int_params
 
 from repro.configs.cnn import CNN_BENCHMARKS, CNNConfig, ConvLayer, FCLayer
 from repro.core.mapping import plan_network
@@ -31,18 +32,6 @@ def _toy_cnn() -> CNNConfig:
         ConvLayer("c2", 4, 4, 300, 64, k=3, pool_k=2, pool_s=2),
         FCLayer("fc", 256, 10),
     ))
-
-
-def _int_params(cnn, rng):
-    params = {}
-    for l in cnn.layers:
-        if isinstance(l, ConvLayer):
-            params[l.name] = rng.integers(
-                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
-        else:
-            params[l.name] = rng.integers(
-                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
-    return params
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,224 @@
+"""Pipelined streaming executor: frames overlapping across the layer
+pipeline must be *bitwise* indistinguishable from the sequential trace
+backend per frame (logits, ``SimCounters``, ``TrafficCounters``), the
+steady-state initiation interval measured from the simulated stage
+timeline must equal ``plan_network``'s analytic slowest-stage bound,
+and the retired B=1 BLAS caveat must stay retired (``gemm_rows``
+pins every product to a row-position-invariant gemm path)."""
+import numpy as np
+import pytest
+from conftest import int_params as _int_params
+
+from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
+from repro.core.network import NetworkSimulator
+from repro.core.schedule import compile_conv_block
+from repro.core.simulator import BlockSimulator, gemm_rows, simulate_fc
+from repro.core.trace import TraceExecutor
+from repro.core.transport import RESIDUAL
+
+
+def _stream_setup(name, t_n, seed=0):
+    rng = np.random.default_rng(seed)
+    cnn = CNN_BENCHMARKS[name]()
+    params = _int_params(cnn, rng)
+    hw = cnn.input_hw
+    frames = rng.integers(0, 2, (t_n, hw, hw, 3)).astype(np.float64)
+    sim = NetworkSimulator(cnn, params, backend="trace", streaming=True)
+    return sim, frames
+
+
+# ---------------------------------------------------------------------------
+# Streaming vs sequential: per-frame bitwise equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,t_n", [("vgg11-cifar10", 5),
+                                      ("resnet18-cifar10", 4)])
+def test_stream_bitwise_equals_sequential(name, t_n):
+    """Per-frame OFMs from the pipeline equal both the batched
+    sequential run (frames as batch lanes) and T independent B=1
+    sequential runs — bitwise, with per-frame counters preserved."""
+    sim, frames = _stream_setup(name, t_n)
+    res = sim.run_stream(frames)
+    assert res.logits.shape[0] == t_n
+    seq = sim.run(frames)
+    assert res.logits.tobytes() == seq.logits.tobytes()
+    for t in range(t_n):
+        one = sim.run(frames[t])
+        assert np.array_equal(one.logits, res.logits[t])
+        assert one.counters == res.frame_counters[t]
+        assert one.traffic.byte_hops == res.frame_traffic[t].byte_hops
+        assert one.traffic.packets == res.frame_traffic[t].packets
+        assert one.traffic.hops == res.frame_traffic[t].hops
+
+
+def test_stream_residuals_cross_the_skew():
+    """ResNet shortcuts are buffered across the pipeline skew (the
+    paper's FIFO forwarding): with several frames in flight, more than
+    one saved block input is alive at once, and every frame still
+    carries its own RESIDUAL-class routed traffic."""
+    sim, frames = _stream_setup("resnet18-cifar10", 4)
+    res = sim.run_stream(frames)
+    assert res.residual_fifo_depth >= 2  # overlapping frames, not just 1
+    for t in range(4):
+        assert res.frame_traffic[t].byte_hops[RESIDUAL] > 0
+        assert res.frame_traffic[t].packets[RESIDUAL] > 0
+
+
+# ---------------------------------------------------------------------------
+# Measured initiation interval == analytic bound
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["vgg11-cifar10", "resnet18-cifar10"])
+def test_stream_measured_ii_equals_analytic(name):
+    sim, frames = _stream_setup(name, 5)
+    res = sim.run_stream(frames)
+    assert res.measured_ii == res.analytic_ii \
+        == sim.plan.initiation_interval
+    # the steady state is reached from frame 1 on: every exit-to-exit
+    # delta equals the measured II, not just the last pair
+    deltas = np.diff(res.finish[:, -1])
+    assert (deltas == res.measured_ii).all()
+    # throughput at the Tab. 3 step clock reproduces the Tab. 4 rate
+    assert res.inferences_per_s(10e6) == pytest.approx(
+        10e6 / sim.plan.initiation_interval)
+    # fill is pipeline depth, far above the steady-state interval
+    assert res.fill_latency > res.measured_ii
+    assert res.total_cycles == res.fill_latency + \
+        (len(frames) - 1) * res.measured_ii
+
+
+def test_stream_arrival_limited_vs_backpressure_limited():
+    """Spaced arrivals: when requests arrive slower than the pipeline's
+    initiation interval, exits are arrival-limited and every frame sees
+    the bare fill latency; back-to-back arrivals queue instead."""
+    sim, frames = _stream_setup("vgg11-cifar10", 4)
+    ii = sim.plan.initiation_interval
+    spaced = sim.run_stream(
+        frames, arrivals=np.arange(4, dtype=np.int64) * (ii * 50))
+    assert (spaced.frame_latency == spaced.fill_latency).all()
+    assert spaced.measured_ii == ii * 50  # exit spacing = arrival spacing
+    burst = sim.run_stream(frames)  # all at cycle 0
+    lat = burst.frame_latency
+    assert (np.diff(lat) == burst.measured_ii).all()  # queueing delay grows
+    # arrivals never change the math
+    assert spaced.logits.tobytes() == burst.logits.tobytes()
+
+
+def test_stream_flag_validation():
+    rng = np.random.default_rng(2)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _int_params(cnn, rng)
+    with pytest.raises(ValueError):  # streaming needs the trace backend
+        NetworkSimulator(cnn, params, streaming=True)
+    with pytest.raises(ValueError):  # jit is allclose-only: no bitwise
+        NetworkSimulator(cnn, params, backend="trace", trace_jit=True,
+                         streaming=True)
+    sim = NetworkSimulator(cnn, params, backend="trace")
+    x = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+    with pytest.raises(ValueError):  # run_stream needs streaming=True
+        sim.run_stream(x)
+    stream_sim = NetworkSimulator(cnn, params, backend="trace",
+                                  streaming=True)
+    with pytest.raises(ValueError):  # one frame has no steady state
+        stream_sim.run_stream(x[:1])
+
+
+# ---------------------------------------------------------------------------
+# Request-queue front-end (closed-loop serving stats)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stream_report():
+    from repro.runtime.serve_loop import serve_stream
+
+    sim, frames = _stream_setup("vgg11-cifar10", 6)
+    rep = serve_stream(sim, frames)  # offered rate = the analytic II rate
+    ii = sim.plan.initiation_interval
+    # offered exactly at the pipeline's own rate: no queueing delay, so
+    # every request sees the bare fill latency and throughput equals the
+    # steady-state rate
+    assert (rep.latency_cycles == rep.fill_latency).all()
+    assert rep.measured_ii == rep.analytic_ii == ii
+    assert rep.throughput_inf_s == pytest.approx(rep.clock_hz / ii)
+    counts, edges = rep.latency_hist
+    assert counts.sum() == len(frames)
+    pct = rep.latency_percentiles()
+    assert pct["p50"] == pct["p99"] == rep.fill_latency
+    # oversubscribed queue: latency grows linearly with position
+    hot = serve_stream(sim, frames, offered_inf_s=4 * rep.clock_hz / ii)
+    assert hot.latency_cycles[-1] > hot.latency_cycles[0]
+
+
+# ---------------------------------------------------------------------------
+# The retired B=1 BLAS caveat (gemv / remainder-row-block dispatch)
+# ---------------------------------------------------------------------------
+
+
+def test_b1_float_block_bitwise_regression():
+    """Unbatched runs with inexact float data: trace must equal interp
+    bitwise — this was the documented gemv caveat before ``gemm_rows``
+    pinned single-row products to the gemm path."""
+    rng = np.random.default_rng(42)
+    for c in (5, 64, 256):
+        h = w = 9
+        m, k = 8, 3
+        ifm = rng.standard_normal((h, w, c))
+        wts = rng.standard_normal((k, k, c, m))
+        sched = compile_conv_block(f"b1-{c}", h, w, c, m, k, 1, 1)
+        out_i = BlockSimulator(sched, wts).run(ifm)
+        out_t = TraceExecutor(sched, wts).run(ifm)
+        assert out_i.tobytes() == out_t.tobytes(), f"c_in={c}"
+
+
+def test_b1_float_network_bitwise_regression():
+    """Whole-network float-data B=1: interp == trace bitwise, and the
+    single frame equals its own lane of a batched run."""
+    rng = np.random.default_rng(5)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {
+        l.name: (rng.standard_normal((l.k, l.k, l.c, l.m))
+                 if isinstance(l, ConvLayer)
+                 else rng.standard_normal((l.c_in, l.c_out)))
+        for l in cnn.layers
+    }
+    x = rng.standard_normal((3, 32, 32, 3))
+    one_i = NetworkSimulator(cnn, params).run(x[0])
+    tr = NetworkSimulator(cnn, params, backend="trace")
+    one_t = tr.run(x[0])
+    assert one_i.logits.tobytes() == one_t.logits.tobytes()
+    batched = tr.run(x)  # B=3: a remainder row block before gemm_rows
+    assert np.array_equal(batched.logits[0], one_t.logits)
+
+
+def test_gemm_rows_is_row_position_invariant():
+    """The primitive underneath the guarantee: any row of any product
+    equals the same row computed alone, including remainder-block row
+    counts (1..3 and tails like 6 or 81) and the narrow FC head."""
+    rng = np.random.default_rng(9)
+    for n in (10, 64):  # 10: the output width that exposed edge kernels
+        w = rng.standard_normal((256, n))
+        a = rng.standard_normal((81, 256)) * 1e15  # inexact everywhere
+        full = gemm_rows(a, w)
+        for m in (1, 2, 3, 4, 6, 81):
+            sub = gemm_rows(a[:m], w)
+            assert np.array_equal(sub, full[:m]), (n, m)
+    # and the out= flavor the trace executor uses
+    a, w = rng.standard_normal((3, 64)), rng.standard_normal((64, 7))
+    out = np.empty((3, 7))
+    assert gemm_rows(a, w, out=out) is out
+    assert np.array_equal(out, gemm_rows(a, w))
+
+
+def test_fc_b1_equals_batched_lane():
+    """simulate_fc shares gemm_rows: a single request's FC result equals
+    its lane of a batched run even for inexact data (the 10-class head
+    previously hit a different BLAS edge kernel per batch size)."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((6, 512)) * 1e12
+    w = rng.standard_normal((512, 10))
+    full = simulate_fc(x, w, 256, 256)
+    for b in (1, 2, 3, 6):
+        sub = simulate_fc(x[:b], w, 256, 256)
+        assert np.array_equal(sub, full[:b]), b

@@ -10,6 +10,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+from conftest import int_params as _int_params
 
 from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
 from repro.core.mapping import plan_network
@@ -23,18 +24,6 @@ from repro.core.transport import RESIDUAL
 def _int_data(seed, shape, lo=-4, hi=5):
     return np.random.default_rng(seed).integers(lo, hi, shape).astype(
         np.float64)
-
-
-def _int_params(cnn, rng):
-    params = {}
-    for l in cnn.layers:
-        if isinstance(l, ConvLayer):
-            params[l.name] = rng.integers(
-                -1, 2, (l.k, l.k, l.c, l.m)).astype(np.float64)
-        else:
-            params[l.name] = rng.integers(
-                -1, 2, (l.c_in, l.c_out)).astype(np.float64)
-    return params
 
 
 def _assert_block_equal(sched, wts, bias, ifm):
@@ -299,10 +288,9 @@ def test_resnet18_small_slice_exact_vs_jax():
 @pytest.mark.slow
 def test_resnet18_trace_bitwise_equals_interp():
     """The full ResNet-18 run: trace == interp bitwise even where the
-    arithmetic is inexact (association orders match by construction).
-    B=2: at B=1 BLAS dispatches the interpreter's per-pixel product to a
-    gemv kernel whose reduction order differs from gemm rows — there the
-    guarantee holds for exact-representable data only (see core/trace.py)."""
+    arithmetic is inexact (association orders match by construction;
+    ``gemm_rows`` makes this batch-size independent — the B=1 flavor is
+    covered in tests/test_streaming.py)."""
     cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
     rng = np.random.default_rng(1)
     params = _int_params(cnn, rng)
