@@ -350,6 +350,141 @@ def stream_smoke(frames: int = 4, seed: int = 0) -> int:
     return 0 if ok else 1
 
 
+#: adc_bits sweep for the quantized-accuracy rows (the README table)
+CIM_ADC_BITS = (8, 6, 4)
+
+
+def bench_cim():
+    """Quantized CIM inference rows (``cim_*``): vgg11-cifar10 through
+    the ``CIMEngine`` at 8/6/4 ADC bits — top-1 agreement with the float
+    forward, mean logit divergence, and the precision-aware energy
+    breakdown (ADC share of total) — plus a ``cim_codes`` row asserting
+    the CIM and Pallas engines emit identical ADC codes end-to-end.
+    These rows carry *match/accuracy* results (checked in-row), not wall
+    time; ``--check-regress`` ignores them like ``dse_*``."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.cim import CIMSpec
+    from repro.core.energy import analyze
+    from repro.core.engine import CIMEngine, PallasEngine
+    from repro.core.network import NetworkSimulator
+    from repro.models.cnn import cnn_forward, init_cnn
+
+    import jax
+
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {k: np.asarray(v, np.float64)
+              for k, v in init_cnn(jax.random.PRNGKey(0), cnn).items()}
+    b = 8
+    x = rng.random((b, 32, 32, 3))
+    ref = np.asarray(cnn_forward(
+        {k: jnp.asarray(v, jnp.float32) for k, v in params.items()},
+        jnp.asarray(x, jnp.float32), cnn))
+
+    rows = []
+    pallas_checked = False
+    for bits in CIM_ADC_BITS:
+        spec = CIMSpec(adc_bits=bits)
+        engine = CIMEngine(spec)
+        t0 = time.perf_counter()
+        res = NetworkSimulator(cnn, params, backend="trace", engine=engine,
+                               calib_images=x).run(x)
+        us = (time.perf_counter() - t0) * 1e6
+        agree = float((res.logits.argmax(-1) == ref.argmax(-1)).mean())
+        # relative divergence: untrained random weights leave tiny logit
+        # gaps, so top-1 agreement is a weak signal — the normalized
+        # logit error is the meaningful fidelity column
+        rel = float(np.linalg.norm(res.logits - ref)
+                    / np.linalg.norm(ref))
+        erep = analyze(cnn, cim_spec=spec)
+        eb = erep.breakdown()
+        derived = (f"top1_agree={agree:.3f} rel_logit_err={rel:.4f} "
+                   f"cim_uJ={eb['cim_uJ']:.2f} adc_uJ={eb['cim_adc_uJ']:.2f} "
+                   f"adc_share={erep.adc_share:.3f} "
+                   f"CE={erep.ce_tops_per_w:.2f}TOPS/W")
+        if not pallas_checked:  # code-exactness once, at the paper config
+            pal = PallasEngine(spec)
+            pal.calib = dict(engine.calib)
+            res_p = NetworkSimulator(cnn, params, backend="trace",
+                                     engine=pal).run(x[:2])
+            res_c = NetworkSimulator(cnn, params, backend="trace",
+                                     engine=engine).run(x[:2])
+            match = res_p.logits.tobytes() == res_c.logits.tobytes()
+            rows.append(("cim_codes_pallas_vs_cim", 0.0,
+                         f"bitwise={match}"))
+            pallas_checked = True
+        rows.append((f"cim_vgg11_adc{bits}", us, derived))
+    return rows
+
+
+def cim_smoke(seed: int = 0) -> int:
+    """Bounded CI smoke (``--cim-smoke``): non-zero exit on any ADC-code
+    mismatch between engines — (1) a conv block through the CIM vs
+    Pallas engines on both backends, (2) two fixed-seed vgg11 frames
+    through the pipelined CIM executor vs the sequential trace run, and
+    interp vs trace on one frame."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.cim import CIMSpec
+    from repro.core.engine import CIMEngine, PallasEngine
+    from repro.core.network import NetworkSimulator
+    from repro.core.schedule import compile_conv_block
+    from repro.core.simulator import BlockSimulator
+    from repro.core.trace import TraceExecutor
+
+    rng = np.random.default_rng(seed)
+    ok = True
+    spec = CIMSpec(adc_bits=8, gain=64.0)
+
+    # (1) block level: cim == pallas, interp == trace, all four bitwise
+    h = w = 8
+    c, m, k = 4, 6, 3
+    ifm = rng.standard_normal((2, h, w, c))
+    wts = rng.standard_normal((k, k, c, m))
+    sched = compile_conv_block("smoke", h, w, c, m, k, 1, 1)
+    a_scale = float(np.abs(ifm).max()) / 127
+    cim = CIMEngine(spec).set_layer("smoke", a_scale=a_scale)
+    pal = PallasEngine(spec).set_layer("smoke", a_scale=a_scale)
+    outs = {
+        "cim/interp": BlockSimulator(sched, wts, engine=cim).run(ifm),
+        "cim/trace": TraceExecutor(sched, wts, engine=cim).run(ifm),
+        "pallas/interp": BlockSimulator(sched, wts, engine=pal).run(ifm),
+        "pallas/trace": TraceExecutor(sched, wts, engine=pal).run(ifm),
+    }
+    base = outs["cim/interp"].tobytes()
+    for name, out in outs.items():
+        if out.tobytes() != base:
+            print(f"cim-smoke: block codes mismatch at {name}")
+            ok = False
+
+    # (2) network level: streaming == sequential, interp == trace
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _bench_params(cnn, rng)
+    frames = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+    engine = CIMEngine(spec)
+    sim = NetworkSimulator(cnn, params, backend="trace", streaming=True,
+                           engine=engine)
+    sres = sim.run_stream(frames)
+    seq = sim.run(frames)
+    if sres.logits.tobytes() != seq.logits.tobytes():
+        print("cim-smoke: streaming vs sequential logits mismatch")
+        ok = False
+    it = NetworkSimulator(cnn, params, backend="interp",
+                          engine=engine).run(frames[:1])
+    if it.logits.tobytes() != seq.logits[:1].tobytes():
+        print("cim-smoke: interp vs trace logits mismatch")
+        ok = False
+    print(f"cim-smoke: {'ok' if ok else 'FAIL'} — block cim==pallas on "
+          f"both backends, vgg11 stream==seq and interp==trace under "
+          f"engine='cim' (II={sres.measured_ii})")
+    return 0 if ok else 1
+
+
 def bench_dse(budget: int = 64):  # > default space size: exhaustive sweep
     """Design-space exploration winners (``--dse``): per model, the best
     placement found at the baseline plan vs the snake baseline — CIFAR
@@ -421,8 +556,14 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     fails on them — and non-gated baseline rows (``dse_*`` search
     results, ``stream_*`` streaming rows — fill/drain-dominated at the
     bench's bounded frame counts, so their wall time is not a steady-
-    state signal — and ``tab4_*``/``fig*`` model rows) are ignored
-    entirely.
+    state signal — ``cim_*`` quantized-accuracy rows, and
+    ``tab4_*``/``fig*`` model rows) are never speed-gated.  ``cim_*``
+    rows are instead checked for *equality of match*, not speed: each
+    row carries its own bitwise/agreement result, and this gate fails
+    if any committed ``cim_*`` row carries a ``False`` match field
+    (the live engines themselves are gated by ``--cim-smoke``); their
+    wall time includes one-off calibration and jit warmup, so a speed
+    ratio on them would gate noise, not code.
 
     Each bench runs twice and the per-row *minimum* is compared —
     wall-clock on a small shared CI box jitters by tens of percent, and
@@ -431,8 +572,17 @@ def check_regress(baseline_path: str = "BENCH_core.json",
         print(f"check-regress: baseline {baseline_path} not found")
         return 2
     with open(baseline_path) as f:
-        baseline = {r["name"]: r["us_per_call"]
-                    for r in json.load(f)["rows"]}
+        brows = json.load(f)["rows"]
+    baseline = {r["name"]: r["us_per_call"] for r in brows}
+    # equality-of-match check on the committed cim_* rows: a regressed
+    # quantized-engine result (bitwise=False / a broken agreement field)
+    # must not sit silently in the committed baseline
+    bad_match = [r["name"] for r in brows
+                 if r["name"].startswith("cim_") and "False" in r["derived"]]
+    if bad_match:
+        print("check-regress: FAIL — committed cim_* rows carry a False "
+              f"match field: {', '.join(bad_match)}")
+        return 1
     benches = [globals()[name] for name in SIM_BENCHES]
     fresh = {}
     for fn in benches:
@@ -489,19 +639,27 @@ def main(argv=None) -> None:
                          "fails on any bitwise mismatch vs the sequential "
                          "trace run or on a measured-vs-analytic II "
                          "disagreement")
+    ap.add_argument("--cim-smoke", action="store_true",
+                    help="bounded quantized-engine smoke for CI: a conv "
+                         "block through the CIM vs Pallas engines on both "
+                         "backends plus 2 fixed-seed vgg11 frames under "
+                         "engine='cim'; fails on any ADC-code mismatch "
+                         "between engines or executors")
     args = ap.parse_args(argv)
 
     if args.check_regress:
         raise SystemExit(check_regress(args.check_regress))
     if args.stream_smoke:
         raise SystemExit(stream_smoke())
+    if args.cim_smoke:
+        raise SystemExit(cim_smoke())
 
     rows = []
     print("name,us_per_call,derived")
     benches = [bench_tab4, bench_fig7, bench_fig11, bench_fig12,
                bench_kernels, bench_simulator, bench_sim_batched,
                bench_network_sim, bench_network_sim_resnet,
-               bench_network_stream, bench_roofline_summary]
+               bench_network_stream, bench_cim, bench_roofline_summary]
     if args.dse:
         benches.append(bench_dse)
     for fn in benches:

@@ -19,3 +19,7 @@ python -m benchmarks.run --stream-smoke
 # bounded mapping-DSE smoke: tiny fixed-seed space, winners bitwise-
 # validated against the snake baseline (<30 s; exits non-zero on mismatch)
 python -m repro.dse --smoke --seed 0
+# bounded quantized-engine smoke: CIM vs Pallas ADC codes on a conv block
+# (both backends) + 2 vgg11 frames under engine="cim" (stream==seq,
+# interp==trace); exits non-zero on any code mismatch between engines
+python -m benchmarks.run --cim-smoke

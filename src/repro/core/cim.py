@@ -84,6 +84,26 @@ class CIMSpec:
 DEFAULT_SPEC = CIMSpec()
 
 
+def lossless_spec(n_c: int = 256, w_bits: int = 8, a_bits: int = 8) -> CIMSpec:
+    """A spec whose ADC step is exactly 1 code per dot unit: the converter
+    is wide enough that ``q_max >= full_scale`` (no saturation) and the
+    gain makes the float32 inverse step round to exactly 1.0 — so ADC
+    codes *are* the exact subarray dots and the quantized pipeline
+    degenerates to plain w8a8 (the invariant ``tests/test_engine.py``
+    locks down on every benchmark conv geometry)."""
+    import math
+
+    w_max = 2 ** (w_bits - 1) - 1
+    a_max = 2 ** (a_bits - 1) - 1
+    fs = n_c * w_max * a_max
+    adc_bits = math.ceil(math.log2(fs + 1)) + 1  # q_max = 2^(b-1)-1 >= fs
+    q_max = 2 ** (adc_bits - 1) - 1
+    spec = CIMSpec(n_c=n_c, w_bits=w_bits, a_bits=a_bits,
+                   adc_bits=adc_bits, gain=fs / q_max)
+    assert spec.lossless and np.float32(spec.adc_inv_step) == np.float32(1.0)
+    return spec
+
+
 # ---------------------------------------------------------------------------
 # Quantization helpers
 # ---------------------------------------------------------------------------

@@ -1,0 +1,547 @@
+"""Pluggable PE numerics engines — the one seam every executor MACs
+through.
+
+The Domino PE's arithmetic used to be welded into each executor
+(``BlockSimulator._pe_mac``, ``simulate_fc``, ``TraceExecutor``); this
+module rips it out and re-lands it behind one interface, so the
+per-cycle interpreter, the trace-compiled fast path, the streaming
+wavefront and the FC grid all call the *same* engine object:
+
+* :class:`ExactEngine` — the float64 ``gemm_rows`` path, bit-for-bit
+  identical to the pre-engine executors (the default; every existing
+  bitwise guarantee — interp == trace, streaming == sequential, batch
+  invariance — is preserved unchanged);
+* :class:`CIMEngine` — faithful w8a8 CIM numerics (paper §4.5): 8-bit
+  weights resident per tile (one tile == one ``<= n_c``-row subarray, by
+  the mapping planner's construction), activations quantized with a
+  *per-layer static scale*, an exact integer subarray dot, the SAR-ADC
+  round-and-saturate, and *digital* accumulation of ADC codes along the
+  chain — exactly what Domino's Rofm adds "on the move".  Codes are
+  small integers, hence exact in float64, so every executor-level
+  association order yields identical bits: interp == trace == streaming
+  under quantization *by construction*;
+* :class:`PallasEngine` — the same quantization state, but the integer
+  dot + ADC runs through the Pallas kernel
+  (``kernels/cim_matmul.py::cim_matmul_pallas``, interpret mode
+  off-TPU).  Each tile call is one kernel subarray step, so its ADC
+  codes are bitwise-identical to :class:`CIMEngine`'s.
+
+ADC-code equality across the jnp / numpy / Pallas flavors holds because
+all three compute the conversion identically: the exact integer dot is
+cast ``int32 -> float32``, multiplied by the ``float32`` inverse step,
+rounded half-to-even and saturated (see :meth:`CIMEngine._adc` and the
+kernel body).
+
+Calibration (the paper's per-layer integration-gain knob): a float
+forward pass captures each layer's input (``models/cnn.py::
+collect_layer_inputs``), from which the engine derives the per-layer
+activation scale (w8a8's ``a_scale``) and runs
+:func:`repro.core.cim.calibrate_gain` once at network build.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cim import CIMSpec, DEFAULT_SPEC, calibrate_gain, quantize_symmetric
+
+#: engine registry keys accepted by ``make_engine`` / ``NetworkSimulator``
+ENGINES = ("exact", "cim", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization shared by every quantized consumer (engines, the
+# serving-side ``quantize_cnn_params_for_serving``): symmetric int8 with a
+# per-output-column scale over the *flattened contraction* — (K*K*C, M)
+# for conv kernels, (C_in, C_out) for FC — matching the crossbar layout.
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(K, K, C, M) or (C_in, C_out) float -> (q int8 same shape, s (M,))."""
+    import jax.numpy as jnp
+
+    w = np.asarray(w)
+    m = w.shape[-1]
+    q, s = quantize_symmetric(jnp.asarray(w.reshape(-1, m), jnp.float32),
+                              8, axis=0)
+    return (np.asarray(q).reshape(w.shape),
+            np.asarray(s, np.float64).reshape(m))
+
+
+def dequantize_weight(q: np.ndarray, s: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_weight` (float64 view for exact paths
+    and calibration)."""
+    return np.asarray(q, np.float64) * np.asarray(s, np.float64).reshape(-1)
+
+
+def is_quantized_leaf(leaf) -> bool:
+    """A ``{"q", "s"}`` dict leaf — the CIM-resident serving format."""
+    return isinstance(leaf, dict) and "q" in leaf and "s" in leaf
+
+
+# ---------------------------------------------------------------------------
+# Per-layer engine state (handles)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TileTaps:
+    """One tile's weight slice: which taps / channel slice it holds."""
+
+    tap_row: int
+    tap_col: int
+    pack: int
+    c_lo: int
+    c_hi: int  # resolved (never None)
+
+
+def conv_tile_slices(sched) -> Tuple[TileTaps, ...]:
+    """The tile -> weight-slice map of a compiled ``BlockSchedule``."""
+    out = []
+    for prog in sched.tiles:
+        c_hi = prog.c_hi if prog.c_hi is not None else sched.c_in
+        out.append(TileTaps(prog.tap_row, prog.tap_col, prog.pack,
+                            prog.c_lo, c_hi))
+    return tuple(out)
+
+
+@dataclass
+class ConvHandle:
+    """Engine-domain state for one conv layer's tile chain."""
+
+    name: str
+    c_out: int
+    tile_w: List[np.ndarray]            # per tile (pack, Cs, M) float64
+    # quantized extras (None on the exact engine)
+    tile_w8: Optional[List[np.ndarray]] = None  # per tile (pack, Cs, M) int8
+    deq: Optional[np.ndarray] = None    # (M,) code -> float multiplier
+    a_scale: float = 1.0
+    a_clip: float = 127.0               # activation code saturation
+    inv_step32: Optional[np.float32] = None
+    code_lo: float = 0.0
+    code_hi: float = 0.0
+    spec: Optional[CIMSpec] = None      # per-layer spec (calibrated gain)
+
+
+@dataclass
+class FCHandle:
+    """Engine-domain state for one FC layer's tile grid."""
+
+    name: str
+    w: np.ndarray                       # (C_in, C_out) float64 (engine domain)
+    w8: Optional[np.ndarray] = None     # int8 flavor (Pallas)
+    deq: Optional[np.ndarray] = None
+    a_scale: float = 1.0
+    a_clip: float = 127.0
+    inv_step32: Optional[np.float32] = None
+    code_lo: float = 0.0
+    code_hi: float = 0.0
+    spec: Optional[CIMSpec] = None
+
+
+@dataclass(frozen=True)
+class LayerCalib:
+    """Per-layer calibration: activation scale + ADC integration gain."""
+
+    a_scale: float = 1.0
+    gain: Optional[float] = None  # None = the spec's own gain
+
+
+# ---------------------------------------------------------------------------
+# The engines
+# ---------------------------------------------------------------------------
+
+
+class PEEngine:
+    """Interface every executor MACs through.
+
+    ``tile_mac`` is one conv tile's PE firing: the packed-tap window
+    against the tile's resident weights, returning the value the tile
+    transmits (a float psum for the exact engine, digitally-accumulable
+    ADC codes for the quantized ones).  ``fc_mac`` is one FC grid tile's
+    MVM slice.  ``finalize_*`` converts the digitally-accumulated total
+    back to the real-valued domain at the block tail, *before* bias /
+    activation / pooling.
+    """
+
+    name = "abstract"
+    #: quantized engines need the per-layer calibration pass at build
+    needs_calibration = False
+
+    # -- conv ---------------------------------------------------------------
+    def conv_handle(self, name: str, weights: np.ndarray,
+                    tiles: Sequence[TileTaps],
+                    prequant: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                    ) -> ConvHandle:
+        raise NotImplementedError
+
+    def tile_mac(self, h: ConvHandle, t: int, taps: Sequence[np.ndarray],
+                 quantized: bool = False) -> np.ndarray:
+        """taps[d]: (rows, Cs) float64 — the Rifm shift-buffer window
+        (interp) or the gathered patch columns (trace), channel-sliced.
+        Partial windows (row starts) pass fewer than ``pack`` taps.
+        ``quantized=True`` marks taps already passed through
+        :meth:`quant_stream` (skip per-tap quantization)."""
+        raise NotImplementedError
+
+    def finalize_conv(self, h: ConvHandle, acc: np.ndarray) -> np.ndarray:
+        return acc
+
+    # -- fc -----------------------------------------------------------------
+    def fc_handle(self, name: str, w: np.ndarray,
+                  prequant: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                  ) -> FCHandle:
+        raise NotImplementedError
+
+    def fc_mac(self, h: FCHandle, x: np.ndarray, k0: int, k1: int,
+               n0: int, n1: int, quantized: bool = False) -> np.ndarray:
+        raise NotImplementedError
+
+    def finalize_fc(self, h: FCHandle, psum: np.ndarray,
+                    n0: int, n1: int) -> np.ndarray:
+        return psum
+
+    # -- activation-domain hook ---------------------------------------------
+    def quant_stream(self, h, x: np.ndarray) -> np.ndarray:
+        """Convert an activation stream into the engine's input domain
+        ONCE per run (identity on the exact engine; static per-layer
+        int quantization on the quantized ones).  Executors that call
+        this pass ``quantized=True`` to ``tile_mac``/``fc_mac`` so the
+        same pixel is not re-quantized per (tile, tap) — quantization
+        is elementwise with a static scale, so it commutes with the
+        gather/slice and the bits are identical either way."""
+        return x
+
+    # -- calibration (no-op on the exact engine) ----------------------------
+    def calibrate_layer(self, name: str, x: np.ndarray,
+                        w: np.ndarray) -> None:
+        pass
+
+
+class ExactEngine(PEEngine):
+    """The pre-engine float64 path, bit-for-bit: zeros accumulator, one
+    ``gemm_rows`` per packed tap (row-position-invariant BLAS), identity
+    finalization."""
+
+    name = "exact"
+
+    def __init__(self):
+        # one-slot gemm scratch: within a block run every tile_mac has the
+        # same (rows, M), so the product buffer is reused across tiles
+        self._skey: Optional[Tuple[int, int]] = None
+        self._sbuf: Optional[np.ndarray] = None
+
+    def conv_handle(self, name, weights, tiles, prequant=None):
+        if prequant is not None:
+            weights = dequantize_weight(*prequant)
+        weights = np.asarray(weights, np.float64)
+        tile_w = [
+            np.asarray(weights[tt.tap_row, tt.tap_col:tt.tap_col + tt.pack,
+                               tt.c_lo:tt.c_hi], np.float64)
+            for tt in tiles
+        ]
+        return ConvHandle(name=name, c_out=weights.shape[-1], tile_w=tile_w)
+
+    def _scratch(self, rows: int, cols: int) -> np.ndarray:
+        key = (rows, cols)
+        if self._skey != key:
+            self._skey, self._sbuf = key, np.empty(key, np.float64)
+        return self._sbuf
+
+    def tile_mac(self, h, t, taps, quantized=False):
+        from repro.core.simulator import gemm_rows
+
+        w = h.tile_w[t]
+        acc = buf = None
+        for d, px in enumerate(taps):
+            if acc is None:
+                acc = np.zeros((px.shape[0], h.c_out), np.float64)
+                buf = self._scratch(px.shape[0], h.c_out)
+            gemm_rows(px, w[d], out=buf)
+            acc += buf
+        return acc
+
+    def fc_handle(self, name, w, prequant=None):
+        if prequant is not None:
+            w = dequantize_weight(*prequant)
+        return FCHandle(name=name, w=np.asarray(w, np.float64))
+
+    def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
+        from repro.core.simulator import gemm_rows
+
+        return gemm_rows(x, h.w[k0:k1, n0:n1])
+
+
+class CIMEngine(PEEngine):
+    """w8a8 + per-subarray SAR ADC, digitally accumulated (paper §4.5).
+
+    One conv tile is one crossbar subarray (``pack * C_slice <= n_c`` by
+    the planner), so ``tile_mac`` is: quantize the window with the
+    layer's static activation scale, take the *exact* integer dot over
+    the tile's resident int8 weights, and convert once through the ADC.
+    The returned codes are integers (exact in float64), so chain/group/
+    batch association order cannot change a single bit — the quantized
+    pipeline inherits every bitwise executor guarantee for free.
+    """
+
+    name = "cim"
+    needs_calibration = True
+
+    def __init__(self, spec: CIMSpec = DEFAULT_SPEC,
+                 use_calibrated_gain: bool = True):
+        self.spec = spec
+        self.use_calibrated_gain = use_calibrated_gain
+        self.calib: Dict[str, LayerCalib] = {}
+
+    # -- calibration ---------------------------------------------------------
+
+    def set_layer(self, name: str, a_scale: float = 1.0,
+                  gain: Optional[float] = None) -> "CIMEngine":
+        self.calib[name] = LayerCalib(a_scale=a_scale, gain=gain)
+        return self
+
+    def calibrate_layer(self, name, x, w):
+        """Derive (a_scale, gain) from one layer's captured float input.
+
+        ``a_scale`` fills the int8 activation range with the observed
+        max; ``gain`` runs the paper's integration-gain calibration over
+        the layer's im2col'd contraction (conv kernels are flattened the
+        same way ``models/cnn.py`` feeds the CIM reference)."""
+        import jax.numpy as jnp
+
+        spec = self.spec
+        x = np.asarray(x, np.float32)
+        a_scale = float(np.max(np.abs(x))) / spec.a_max
+        a_scale = max(a_scale, 1e-8)
+        gain = None
+        if self.use_calibrated_gain:
+            cols, wmat = _calibration_matrix(x, np.asarray(w, np.float32))
+            gain = calibrate_gain(jnp.asarray(cols), jnp.asarray(wmat), spec)
+        self.calib[name] = LayerCalib(a_scale=a_scale, gain=gain)
+
+    def _layer_spec(self, name: str) -> Tuple[CIMSpec, float]:
+        cal = self.calib.get(name, LayerCalib())
+        spec = self.spec
+        if cal.gain is not None and self.use_calibrated_gain:
+            spec = replace(spec, gain=cal.gain)
+        return spec, cal.a_scale
+
+    # -- handles -------------------------------------------------------------
+
+    def _common(self, name: str, s_w: np.ndarray):
+        spec, a_scale = self._layer_spec(name)
+        # code -> float: ADC step back to dot units, then the w8a8 scales
+        deq = (spec.adc_step * a_scale) * np.asarray(s_w, np.float64)
+        return dict(
+            deq=deq, a_scale=a_scale, a_clip=float(spec.a_max),
+            inv_step32=np.float32(spec.adc_inv_step),
+            code_lo=float(-spec.q_max - 1), code_hi=float(spec.q_max),
+            spec=spec,
+        )
+
+    def conv_handle(self, name, weights, tiles, prequant=None):
+        if prequant is not None:
+            q, s = np.asarray(prequant[0]), np.asarray(prequant[1])
+            s = np.asarray(s, np.float64).reshape(-1)
+        else:
+            q, s = quantize_weight(weights)
+        tile_q = [
+            np.ascontiguousarray(
+                q[tt.tap_row, tt.tap_col:tt.tap_col + tt.pack,
+                  tt.c_lo:tt.c_hi])
+            for tt in tiles
+        ]
+        for tt, tq in zip(tiles, tile_q):
+            if tt.pack * (tt.c_hi - tt.c_lo) > self.spec.n_c:
+                raise ValueError(
+                    f"{name}: tile holds {tt.pack}x{tt.c_hi - tt.c_lo} "
+                    f"weight rows > n_c={self.spec.n_c} — not one subarray")
+        return ConvHandle(
+            name=name, c_out=q.shape[-1],
+            tile_w=[tq.astype(np.float64) for tq in tile_q],
+            tile_w8=[tq.astype(np.int8) for tq in tile_q],
+            **self._common(name, s),
+        )
+
+    def fc_handle(self, name, w, prequant=None):
+        if prequant is not None:
+            q, s = np.asarray(prequant[0]), np.asarray(prequant[1])
+            s = np.asarray(s, np.float64).reshape(-1)
+        else:
+            q, s = quantize_weight(w)
+        return FCHandle(name=name, w=q.astype(np.float64),
+                        w8=q.astype(np.int8), **self._common(name, s))
+
+    # -- the numerics --------------------------------------------------------
+
+    def _quant(self, x: np.ndarray, h) -> np.ndarray:
+        """Static per-layer activation quantization (int-valued f64)."""
+        return np.clip(np.round(x / h.a_scale), -h.a_clip - 1, h.a_clip)
+
+    def _adc(self, d: np.ndarray, h) -> np.ndarray:
+        """The SAR conversion, bit-for-bit the jnp/Pallas arithmetic:
+        exact int dot -> int32 -> float32, scale by the f32 inverse
+        step, round half-to-even, saturate."""
+        codes = np.round(d.astype(np.int32).astype(np.float32) * h.inv_step32)
+        return np.clip(codes, h.code_lo, h.code_hi).astype(np.float64)
+
+    def quant_stream(self, h, x):
+        return self._quant(x, h)
+
+    def tile_mac(self, h, t, taps, quantized=False):
+        from repro.core.simulator import gemm_rows
+
+        w = h.tile_w[t]
+        d = None
+        for i, px in enumerate(taps):
+            if not quantized:
+                px = self._quant(px, h)
+            p = gemm_rows(px, w[i])
+            d = p if d is None else d + p  # exact ints: order-free
+        return self._adc(d, h)
+
+    def finalize_conv(self, h, acc):
+        return acc * h.deq
+
+    def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
+        from repro.core.simulator import gemm_rows
+
+        xq = x if quantized else self._quant(x, h)
+        w = h.w[k0:k1, n0:n1]
+        # the FC grid tile holds (k1 - k0) weight rows; when the spec's
+        # subarray is smaller, the tile spans several subarrays — one
+        # conversion each, codes accumulated digitally (matching the
+        # Pallas kernel's n_c-wide K steps bit-for-bit)
+        n_c = h.spec.n_c
+        codes = None
+        for s0 in range(0, k1 - k0, n_c):
+            d = gemm_rows(xq[:, s0:s0 + n_c], w[s0:s0 + n_c])
+            c = self._adc(d, h)
+            codes = c if codes is None else codes + c
+        return codes
+
+    def finalize_fc(self, h, psum, n0, n1):
+        return psum * h.deq[n0:n1]
+
+
+class PallasEngine(CIMEngine):
+    """CIM numerics driven by the Pallas kernel: each tile/FC-grid MAC is
+    one ``cim_matmul_pallas`` call whose single K-step *is* the tile's
+    subarray (the kernel zero-pads K to ``n_c`` — padding rows contribute
+    nothing to the exact dot), emitting raw ADC codes.  Bitwise-identical
+    codes to :class:`CIMEngine` by construction; off-TPU the kernel runs
+    in interpret mode (the validation target), on hardware pass
+    ``interpret=False``."""
+
+    name = "pallas"
+
+    def __init__(self, spec: CIMSpec = DEFAULT_SPEC,
+                 use_calibrated_gain: bool = True, interpret: bool = True):
+        super().__init__(spec, use_calibrated_gain)
+        self.interpret = interpret
+
+    def _codes(self, xq8: np.ndarray, wq8: np.ndarray, spec: CIMSpec
+               ) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.cim_matmul import cim_matmul_pallas
+
+        codes = cim_matmul_pallas(jnp.asarray(xq8), jnp.asarray(wq8), spec,
+                                  interpret=self.interpret, emit_codes=True)
+        return np.asarray(codes, np.float64)
+
+    def tile_mac(self, h, t, taps, quantized=False):
+        n = len(taps)
+        if not quantized:
+            taps = [self._quant(px, h) for px in taps]
+        xq = np.concatenate(taps, axis=1).astype(np.int8)
+        wq = h.tile_w8[t][:n].reshape(-1, h.c_out)
+        return self._codes(xq, wq, h.spec)
+
+    def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
+        xq = (x if quantized else self._quant(x, h)).astype(np.int8)
+        return self._codes(xq, np.ascontiguousarray(h.w8[k0:k1, n0:n1]),
+                           h.spec)
+
+
+#: module-level default — the drop-in for every pre-engine call site
+EXACT_ENGINE = ExactEngine()
+
+
+def make_engine(engine, cim_spec: Optional[CIMSpec] = None) -> PEEngine:
+    """Resolve an engine selection (name or instance) to a ``PEEngine``."""
+    if isinstance(engine, PEEngine):
+        if cim_spec is not None:
+            raise ValueError(
+                "pass cim_spec only with an engine *name*; an engine "
+                "instance already carries its spec")
+        return engine
+    if engine == "exact":
+        if cim_spec is not None:
+            raise ValueError("cim_spec has no effect on the exact engine")
+        return ExactEngine()
+    spec = cim_spec if cim_spec is not None else DEFAULT_SPEC
+    if engine == "cim":
+        return CIMEngine(spec)
+    if engine == "pallas":
+        return PallasEngine(spec)
+    raise ValueError(f"engine must be one of {ENGINES}: {engine!r}")
+
+
+# ---------------------------------------------------------------------------
+# Calibration driver
+# ---------------------------------------------------------------------------
+
+#: cap on im2col rows fed to calibrate_gain (deterministic stride
+#: subsample — calibration reads magnitudes, not every pixel)
+_CALIB_ROWS = 4096
+
+
+def _calibration_matrix(x: np.ndarray, w: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(layer input, weight) -> (im2col'd activations, flat weight matrix)
+    in the same (C, K, K) feature order ``models/cnn.py`` uses."""
+    if w.ndim == 2:
+        cols = x.reshape(-1, x.shape[-1])
+        wmat = w
+    else:
+        from jax import lax
+
+        k, _, _, m = w.shape
+        # magnitudes, not geometry: unit stride + SAME padding samples
+        # densest and never yields an empty patch set (late layers can be
+        # smaller than their kernel)
+        patches = lax.conv_general_dilated_patches(
+            x, (k, k), (1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        cols = np.asarray(patches).reshape(-1, patches.shape[-1])
+        wmat = w.transpose(2, 0, 1, 3).reshape(-1, m)
+    if cols.shape[0] > _CALIB_ROWS:
+        cols = cols[::math.ceil(cols.shape[0] / _CALIB_ROWS)]
+    return cols, wmat
+
+
+def calibrate_engine(engine: PEEngine, cnn, params: Dict[str, np.ndarray],
+                     images: np.ndarray) -> None:
+    """Run the float forward on ``images``, capture every layer's input
+    and hand each (input, weight) pair to the engine's per-layer
+    calibration.  Layers the engine already knows are left alone (a
+    pre-calibrated engine instance can be reused across simulators)."""
+    if not engine.needs_calibration:
+        return
+    todo = [l.name for l in cnn.layers if l.name not in
+            getattr(engine, "calib", {})]
+    if not todo:
+        return
+    import jax.numpy as jnp
+
+    from repro.models.cnn import collect_layer_inputs
+
+    p32 = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+    inputs = collect_layer_inputs(p32, jnp.asarray(images, jnp.float32), cnn)
+    for name in todo:
+        engine.calibrate_layer(name, np.asarray(inputs[name]), params[name])

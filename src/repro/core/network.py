@@ -77,7 +77,16 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.cnn import CNNConfig, ConvLayer, FCLayer
+from repro.core.cim import CIMSpec
 from repro.core.energy import STEP_CLOCK_HZ
+from repro.core.engine import (
+    PEEngine,
+    calibrate_engine,
+    conv_tile_slices,
+    dequantize_weight,
+    is_quantized_leaf,
+    make_engine,
+)
 from repro.core.instructions import TABLE_CAPACITY
 from repro.core.mapping import NetworkPlan, plan_network
 from repro.core.noc import Placement, block_spans, place_network
@@ -179,9 +188,14 @@ class NetworkSimulator:
                  dup_cap: int = 64, backend: str = "interp",
                  trace_jit: bool = False, streaming: bool = False,
                  placement: Optional[Placement] = None,
-                 dup_overrides: Optional[Dict[str, int]] = None):
+                 dup_overrides: Optional[Dict[str, int]] = None,
+                 engine: "str | PEEngine" = "exact",
+                 cim_spec: Optional[CIMSpec] = None,
+                 calib_images: Optional[np.ndarray] = None):
         """params: layer name -> (K, K, C, M) conv kernel or (C_in, C_out)
-        FC matrix (the ``models/cnn.py::init_cnn`` convention).
+        FC matrix (the ``models/cnn.py::init_cnn`` convention) — or a
+        ``{"q": int8, "s": scale}`` quantized leaf (the CIM-resident
+        serving format); quantized leaves require a quantized engine.
 
         ``placement`` injects an alternative tile layout (a DSE strategy's
         output) instead of the snake default.  Its block spans must match
@@ -189,6 +203,15 @@ class NetworkSimulator:
         tiles within the interpreter's rendezvous slack (any unit-step
         curve qualifies — ``repro.dse.placements.validate_placement``
         checks); placement changes hops and energy, never the math.
+
+        ``engine`` selects the PE numerics (``core/engine.py``):
+        ``"exact"`` (float64, bit-for-bit the pre-engine behavior),
+        ``"cim"`` (w8a8 + per-subarray ADC, per-layer gain calibrated at
+        build from ``calib_images`` — default: a seeded synthetic batch),
+        ``"pallas"`` (the same numerics through the Pallas kernel,
+        ADC-code-exact vs ``"cim"``), or a prebuilt ``PEEngine``
+        instance.  ``cim_spec`` overrides the quantized engines' crossbar
+        spec (adc_bits etc.) when ``engine`` is a name.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
@@ -205,6 +228,12 @@ class NetworkSimulator:
                 "streaming=True is incompatible with trace_jit=True: the "
                 "float32 jitted path is allclose-only, which would break "
                 "run_stream's per-frame bitwise-vs-sequential guarantee")
+        self.pe_engine: PEEngine = make_engine(engine, cim_spec)
+        if trace_jit and self.pe_engine.name != "exact":
+            raise ValueError(
+                "trace_jit=True is the exact engine's float32 fast path; "
+                f"the {self.pe_engine.name!r} engine's quantized numerics "
+                "run the numpy trace (bitwise across backends)")
         # residual wiring follows the configs/cnn.py naming convention the
         # jax reference uses (save at `*_a`, add at `residual_from`,
         # project through an immediately-following `*_sc`) — reject
@@ -238,7 +267,26 @@ class NetworkSimulator:
                     "layer, so it would run inline on the main path")
             prev = layer
         self.cnn = cnn
-        self.params = params
+        # split quantized {"q","s"} leaves (CIM-resident serving) from the
+        # float view: quantized engines consume the int8 weights directly,
+        # the float view feeds the exact engine and gain calibration
+        self._prequant: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        fparams: Dict[str, np.ndarray] = {}
+        for name, leaf in params.items():
+            if is_quantized_leaf(leaf):
+                q = np.asarray(leaf["q"])
+                s = np.asarray(leaf["s"], np.float64).reshape(-1)
+                self._prequant[name] = (q, s)
+                fparams[name] = dequantize_weight(q, s)
+            else:
+                fparams[name] = np.asarray(leaf, np.float64)
+        if self._prequant and self.pe_engine.name == "exact":
+            raise ValueError(
+                f"{cnn.name}: params carry quantized {{'q','s'}} leaves "
+                f"({sorted(self._prequant)[:3]}...) — run them on a "
+                "quantized engine (engine='cim'/'pallas') or dequantize "
+                "explicitly (repro.runtime.serve_loop.dequantize_params)")
+        self.params = fparams
         self.n_c, self.n_m = n_c, n_m
         self.backend = backend
         self.trace_jit = trace_jit
@@ -298,23 +346,58 @@ class NetworkSimulator:
         # the layer pipeline as explicit stages — the sequential run walks
         # them one frame at a time, the streaming executor overlaps frames
         self._stages: Tuple[_Stage, ...] = self._build_stages()
+        # quantized engines: per-layer calibration (activation scale +
+        # ADC integration gain) runs ONCE at network build, then every
+        # layer's engine handle (resident quantized weights, dequant
+        # multipliers) is built and shared by all executors/strips
+        if self.pe_engine.needs_calibration:
+            if calib_images is None:
+                hw = cnn.input_hw
+                calib_images = np.random.default_rng(0).random((2, hw, hw, 3))
+            calibrate_engine(self.pe_engine, cnn, self.params, calib_images)
+        elif calib_images is not None:
+            raise ValueError(
+                "calib_images has no effect on the exact engine")
+        self._handles: Dict[int, object] = {}
+        for li, layer in enumerate(cnn.layers):
+            if isinstance(layer, ConvLayer):
+                sched0 = self.schedules[li]
+                if sched0 is None:
+                    # width strips run the same tile chain (same taps /
+                    # channel slices), so one engine handle serves all
+                    strips = self._strips[li]
+                    sched0 = strips[0].sched
+                    slices0 = conv_tile_slices(sched0)
+                    assert all(conv_tile_slices(s.sched) == slices0
+                               for s in strips[1:]), layer.name
+                self._handles[li] = self.pe_engine.conv_handle(
+                    layer.name, self.params[layer.name],
+                    conv_tile_slices(sched0),
+                    prequant=self._prequant.get(layer.name))
+            else:
+                self._handles[li] = self.pe_engine.fc_handle(
+                    layer.name, self.params[layer.name],
+                    prequant=self._prequant.get(layer.name))
 
-    def _engine(self, li: int, si: int, sched: BlockSchedule,
-                transport: NoCTransport, counters: SimCounters):
-        """A block engine for (layer, strip) on the chosen backend."""
+    def _executor(self, li: int, si: int, sched: BlockSchedule,
+                  transport: NoCTransport, counters: SimCounters):
+        """A block executor for (layer, strip) on the chosen backend (all
+        strips of a layer share one engine handle — same tile chain)."""
         layer = self.cnn.layers[li]
         if self.backend == "interp":
             return BlockSimulator(
                 sched,
                 np.asarray(self.params[layer.name], np.float64),
-                bias=None, transport=transport, counters=counters)
+                bias=None, transport=transport, counters=counters,
+                engine=self.pe_engine, handle=self._handles[li])
         ex = self._executors.get((li, si))
         if ex is None:
             ex = TraceExecutor(
                 sched,
                 np.asarray(self.params[layer.name], np.float64),
                 bias=None, transport=transport, counters=counters,
-                plan=self._trace_plans[li, si], use_jax=self.trace_jit)
+                plan=self._trace_plans[li, si], use_jax=self.trace_jit,
+                engine=self.pe_engine, handle=self._handles[li])
             self._executors[li, si] = ex
         else:
             ex.transport, ex.counters = transport, counters
@@ -327,15 +410,15 @@ class NetworkSimulator:
         re-streamed; output strips concatenate along the width)."""
         strips = self._strips.get(li)
         if strips is None:
-            return self._engine(li, 0, self.schedules[li], transport,
-                                counters).run(x)
+            return self._executor(li, 0, self.schedules[li], transport,
+                                  counters).run(x)
         layer = self.cnn.layers[li]
         b, p = x.shape[0], layer.p
         padded = np.zeros((b, layer.h + 2 * p, layer.w + 2 * p, layer.c),
                           np.float64)
         padded[:, p:p + layer.h, p:p + layer.w] = x
         outs = [
-            self._engine(li, si, strip.sched, transport, counters)
+            self._executor(li, si, strip.sched, transport, counters)
             .run(padded[:, :, strip.lo:strip.hi])
             for si, strip in enumerate(strips)
         ]
@@ -424,7 +507,8 @@ class NetworkSimulator:
             return simulate_fc(
                 x, np.asarray(self.params[layer.name], np.float64),
                 self.n_c, self.n_m, activation=act,
-                counters=counters, transport=transport)
+                counters=counters, transport=transport,
+                engine=self.pe_engine, handle=self._handles[li])
 
         mesh_root = NoCTransport(noc, base=0, counters=traffic)
         if layer.name.endswith("_a"):

@@ -435,9 +435,20 @@ def compile_fc_block(name: str, c_in: int, c_out: int, n_c: int, n_m: int,
                      activation: Optional[str] = None):
     """FC mapping (paper Fig. 4): m_t x m_a grid; psums add down columns.
 
-    Returns (m_t, m_a, tables) where tables[i][j] is the encoded M/C table
-    for grid tile (i, j): FC_MODE + SUM_ADD chain, activation at column
-    tails.
+    Returns (m_t, m_a, tables) where tables[i][j] is the encoded M-type
+    table for grid tile (i, j): FC_MODE + FROM_PE, the psum chain-add
+    encoded as the *rx* north-receive enable (set only for non-head
+    rows, which are the only tiles with an upstream psum), activation at
+    column tails only.
+
+    Encoding note: the chain-add used to be emitted as the C-type
+    ``SUM_ADD`` bit inside this M-type word — but func bit 0 means
+    ``ACT_EN`` in the M-type namespace, so every non-head grid tile also
+    decoded "apply activation", and ``simulate_fc`` ReLU-clipped
+    *intermediate* partial sums whenever one went negative (diverging
+    from the jax reference ``relu(x @ W)`` on deep chains — the
+    VGG-16/19 FC heads).  The rx field says the same thing without the
+    alias, and ``ACT_EN`` is now unambiguous.
     """
     m_t = math.ceil(c_in / n_c)
     m_a = math.ceil(c_out / n_m)
@@ -446,10 +457,9 @@ def compile_fc_block(name: str, c_in: int, c_out: int, n_c: int, n_m: int,
         row = []
         for j in range(m_a):
             func = FC_MODE | FROM_PE
-            if i > 0:
-                func |= SUM_ADD
+            rx = (1 << int(Port.N)) if i > 0 else 0
             tx = 0 if i == m_t - 1 else (1 << int(Port.S))
-            instr = Instruction(Opcode.M, rx=(1 << int(Port.N)), func=func, tx=tx)
+            instr = Instruction(Opcode.M, rx=rx, func=func, tx=tx)
             if i == m_t - 1 and activation:
                 instr = instr.with_flags(ACT_EN)
             row.append((instr.encode(),))

@@ -14,11 +14,14 @@ Micro-architecture modeled per tile (paper Fig. 2):
 * **Rifm**: systolic pixel pipeline (1 tile/cycle) + shift buffer holding
   the last ``pack`` pixels (in-buffer shifting) + positional MAC gate;
 * **PE**: MAC over the tile's packed taps (and its ``[c_lo, c_hi)``
-  channel slice for C > N_c split chains) — exact fp, or the CIM pipeline
-  (``core/cim.py``) when a ``CIMSpec`` is supplied;
+  channel slice for C > N_c split chains) — performed by the pluggable
+  :mod:`repro.core.engine` layer: the exact float64 path (default), the
+  w8a8 + per-subarray-ADC CIM pipeline, or the Pallas kernel flavor;
 * **Rofm**: W-input register queue (chain psums), the Rofm buffer
   (group-sums waiting for peers), adder, and the tail computation unit
-  (activation + pooling comparator).
+  (activation + pooling comparator).  Under a quantized engine the Rofm
+  accumulates *ADC codes* digitally and the block tail dequantizes
+  (``finalize``) before bias / activation / pooling.
 
 Transport: every chain psum and group-sum is a *routed* packet — the
 tile's compiled ``dst_east``/``dst_south`` id is resolved through
@@ -38,10 +41,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cim import CIMSpec, cim_linear_reference
 from repro.core.instructions import (
     ACT_EN,
     BUF_POP,
@@ -126,10 +127,10 @@ def gemm_rows(a: np.ndarray, w: np.ndarray,
 
 
 class _Tile:
-    def __init__(self, prog: TileProgram, weights: np.ndarray, pack_span: int,
+    def __init__(self, prog: TileProgram, index: int, pack_span: int,
                  c_in: int):
         self.prog = prog
-        self.weights = weights  # (pack, C_slice, M) for this tile's taps
+        self.index = index  # position in the chain == engine handle slot
         self.fifo_w: deque = deque()  # chain psums from the west
         self.fifo_n: deque = deque()  # running group-sums from the north
         self.buffer: deque = deque()  # the Rofm buffer
@@ -140,8 +141,9 @@ class _Tile:
             Instruction.decode(wd) for wd in prog.table
         )
         # full-depth tiles skip the per-MAC channel slice of the pixel;
-        # the weights above are already sliced at construction
+        # the engine handle's weights are already sliced at construction
         c_hi = prog.c_hi if prog.c_hi is not None else c_in
+        self.c_width = c_hi - prog.c_lo
         self.needs_cslice = not (prog.c_lo == 0 and c_hi >= c_in)
 
 
@@ -156,30 +158,37 @@ class BlockSimulator:
 
     def __init__(self, sched: BlockSchedule, weights: np.ndarray,
                  bias: Optional[np.ndarray] = None,
-                 cim_spec: Optional[CIMSpec] = None,
                  transport: Optional[NoCTransport] = None,
-                 counters: Optional[SimCounters] = None):
+                 counters: Optional[SimCounters] = None,
+                 engine: Optional["PEEngine"] = None,
+                 handle: Optional["ConvHandle"] = None):
         """weights: (K, K, C, M) float; bias: (M,).
 
         ``transport`` places the block on a shared mesh and ``counters``
         aggregates events across blocks (whole-network simulation); by
-        default the block lives alone on its own mesh.
+        default the block lives alone on its own mesh.  ``engine``
+        selects the PE numerics (``core/engine.py``; default exact
+        float64); ``handle`` supplies a prebuilt per-layer engine state
+        (the whole-network simulator shares one across strips), else it
+        is built here from ``weights``.
         """
+        from repro.core.engine import EXACT_ENGINE, conv_tile_slices
+
         k = sched.k
         assert weights.shape[:2] == (k, k)
         self.sched = sched
         self.bias = bias
-        self.cim_spec = cim_spec
+        self.engine = engine if engine is not None else EXACT_ENGINE
+        self.handle = handle if handle is not None else \
+            self.engine.conv_handle(sched.layer_name, weights,
+                                    conv_tile_slices(sched))
         self.counters = counters if counters is not None else SimCounters()
         self.transport = transport if transport is not None \
             else _standalone_transport(sched.chain_len)
-        self.tiles: List[_Tile] = []
-        for prog in sched.tiles:
-            c_hi = prog.c_hi if prog.c_hi is not None else sched.c_in
-            taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack,
-                           prog.c_lo:c_hi]
-            self.tiles.append(_Tile(prog, np.asarray(taps, np.float64),
-                                    pack_span=prog.pack, c_in=sched.c_in))
+        self.tiles: List[_Tile] = [
+            _Tile(prog, t, pack_span=prog.pack, c_in=sched.c_in)
+            for t, prog in enumerate(sched.tiles)
+        ]
         self._psum_bytes = sched.c_out * PSUM_BYTES
         # tail pooling state
         self._pool_tmp: Optional[np.ndarray] = None
@@ -194,29 +203,19 @@ class BlockSimulator:
         pixel is ``(B, C)`` and the MAC is batched over B.
 
         Hot path: the shift buffer's maxlen == pack, so its contents ARE
-        the packed-tap window (no per-call list slicing), and the pixel's
-        channel slice is skipped for full-depth tiles (the weights were
-        sliced once at construction)."""
-        c_lo, c_hi = tile.prog.c_lo, tile.prog.c_hi
-        weights = tile.weights
-        needs_cslice = tile.needs_cslice
-        acc = np.zeros((tile.shift_buf[0].shape[0], self.sched.c_out),
-                       np.float64)
-        for d, px in enumerate(tile.shift_buf):
-            w_tap = weights[d]  # (C_slice, M)
-            if needs_cslice:
-                px = px[:, c_lo:c_hi]
-            if self.cim_spec is None:
-                acc += gemm_rows(px, w_tap)
-            else:
-                acc += np.asarray(
-                    cim_linear_reference(
-                        jnp.asarray(px, jnp.float32),
-                        jnp.asarray(w_tap, jnp.float32),
-                        self.cim_spec,
-                    )
-                ).astype(np.float64)
-            self.counters.macs += px.shape[1] * w_tap.shape[1]
+        the packed-tap window (no per-call list slicing when the tile
+        holds the full input depth), and the engine handle's weights
+        were tap/channel-sliced once at construction.  The engine call
+        is the PR's one seam: exact float64, CIM w8a8+ADC, or Pallas."""
+        prog = tile.prog
+        if tile.needs_cslice:
+            c_lo, c_hi = prog.c_lo, prog.c_hi
+            taps = [px[:, c_lo:c_hi] for px in tile.shift_buf]
+        else:
+            taps = tile.shift_buf
+        acc = self.engine.tile_mac(self.handle, tile.index, taps,
+                                   quantized=True)
+        self.counters.macs += len(taps) * tile.c_width * self.sched.c_out
         return acc
 
     # -- main loop -------------------------------------------------------------
@@ -241,6 +240,10 @@ class BlockSimulator:
         if b_run != b:
             stream = np.concatenate(
                 [stream, stream[-1:].repeat(b_run - b, axis=0)])
+        # engine input domain, once per run (identity for exact; static
+        # per-layer int quantization for CIM/Pallas — elementwise, so it
+        # commutes with the Rifm pipeline's latching and slicing)
+        stream = self.engine.quant_stream(self.handle, stream)
         n_pix = stream.shape[1]
         chain = len(self.tiles)
         total_cycles = n_pix + chain + chain  # drain margin
@@ -325,6 +328,9 @@ class BlockSimulator:
         x, y = divmod(idx, s.f)
         instr = s.tail.instr_at(x, y)
         assert instr.opcode == Opcode.M
+        # quantized engines: the accumulated ADC codes leave the digital
+        # domain here, before bias / activation / pooling (exact: no-op)
+        val = self.engine.finalize_conv(self.handle, val)
         if self.bias is not None:
             val = val + self.bias
         if instr.has(ACT_EN):
@@ -363,16 +369,28 @@ class BlockSimulator:
 def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
                 activation: Optional[str] = None,
                 counters: Optional[SimCounters] = None,
-                transport: Optional[NoCTransport] = None) -> np.ndarray:
+                transport: Optional[NoCTransport] = None,
+                engine: Optional["PEEngine"] = None,
+                handle: Optional["FCHandle"] = None) -> np.ndarray:
     """Partitioned MVM on an m_t x m_a tile grid, psums added down columns.
 
     x: (c_in,) or (B, c_in); w: (c_in, c_out).  Driven by compile_fc_block
     tables; column-chain psum traffic is routed/accounted through
-    ``transport`` when the grid is placed on a shared mesh.
+    ``transport`` when the grid is placed on a shared mesh.  Each grid
+    tile holds one ``<= n_c``-row weight slice — exactly one CIM
+    subarray — so the pluggable ``engine`` MACs it in one call and the
+    column chain accumulates digitally (ADC codes under quantization).
     """
+    from repro.core.engine import EXACT_ENGINE
+
+    if engine is None:
+        engine = EXACT_ENGINE
+    if handle is None:
+        handle = engine.fc_handle("fc", np.asarray(w, np.float64))
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None]
+    x = engine.quant_stream(handle, x)  # engine input domain, once
     c_in, c_out = w.shape
     m_t, m_a, tables = compile_fc_block("fc", c_in, c_out, n_c, n_m, activation)
     cnt = counters if counters is not None else SimCounters()
@@ -380,14 +398,18 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
     for j in range(m_a):  # columns compute in parallel; python loop for sim
         n0, n1 = j * n_m, min((j + 1) * n_m, c_out)
         psum = np.zeros((x.shape[0], n1 - n0), np.float64)
+        act_fired = False
         for i in range(m_t):
             instr = Instruction.decode(tables[i][j][0])
             k0, k1 = i * n_c, min((i + 1) * n_c, c_in)
             acc = np.zeros((x.shape[0], n1 - n0), np.float64)
             if instr.has(FROM_PE):
-                acc += gemm_rows(x[:, k0:k1], w[k0:k1, n0:n1])
+                acc += engine.fc_mac(handle, x[:, k0:k1], k0, k1, n0, n1,
+                                     quantized=True)
                 cnt.macs += (k1 - k0) * (n1 - n0)
-            if instr.has(SUM_ADD) and i > 0:
+            if instr.rx_from(Port.N):
+                # chain-add: the upstream psum received from the north
+                # (encoded in rx — set only for non-head grid rows)
                 acc += psum
             psum = acc
             if i < m_t - 1:
@@ -400,7 +422,10 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
                 else:
                     cnt.chain_hops += 1
             if instr.has(ACT_EN):
-                psum = _ACT[activation or "identity"](psum)
-                cnt.act_ops += psum.shape[-1]
+                act_fired = True  # column tail: activation after dequant
+        psum = engine.finalize_fc(handle, psum, n0, n1)
+        if act_fired:
+            psum = _ACT[activation or "identity"](psum)
+            cnt.act_ops += psum.shape[-1]
         out[:, n0:n1] = psum
     return out[0] if squeeze else out

@@ -53,7 +53,7 @@ import numpy as np
 
 from repro.core.instructions import BUF_PUSH, FROM_PE, Instruction, Port
 from repro.core.schedule import BlockSchedule
-from repro.core.simulator import SimCounters, _standalone_transport, gemm_rows
+from repro.core.simulator import SimCounters, _standalone_transport
 from repro.core.transport import CHAIN, GROUP, PSUM_BYTES, NoCTransport
 
 
@@ -151,21 +151,31 @@ class TraceExecutor:
                  transport: Optional[NoCTransport] = None,
                  counters: Optional[SimCounters] = None,
                  plan: Optional[TracePlan] = None,
-                 use_jax: bool = False):
+                 use_jax: bool = False,
+                 engine=None, handle=None):
+        from repro.core.engine import EXACT_ENGINE, conv_tile_slices
+
         k = sched.k
         assert weights.shape[:2] == (k, k)
         self.sched = sched
         self.bias = bias
+        self.engine = engine if engine is not None else EXACT_ENGINE
+        self.handle = handle if handle is not None else \
+            self.engine.conv_handle(sched.layer_name, weights,
+                                    conv_tile_slices(sched))
+        if use_jax and self.engine.name != "exact":
+            raise ValueError(
+                "use_jax=True is the float32 im2col fast path of the exact "
+                f"engine only; the {self.engine.name!r} engine's quantized "
+                "numerics run the numpy trace")
         self.counters = counters if counters is not None else SimCounters()
         self.transport = transport if transport is not None \
             else _standalone_transport(sched.chain_len)
         self.plan = plan if plan is not None else compile_trace(sched)
         self.use_jax = use_jax
-        self.weights: List[np.ndarray] = []
-        for prog, tt in zip(sched.tiles, self.plan.tiles):
-            taps = weights[prog.tap_row, prog.tap_col:prog.tap_col + prog.pack,
-                           tt.c_lo:tt.c_hi]
-            self.weights.append(np.asarray(taps, np.float64))
+        # the engine handle owns the tap/channel-sliced weights; keep the
+        # attribute for the jax path and external inspection
+        self.weights: List[np.ndarray] = self.handle.tile_w
         self._psum_bytes = sched.c_out * PSUM_BYTES
         self._jax_fn = None
 
@@ -191,28 +201,32 @@ class TraceExecutor:
         return out[0] if squeeze else out
 
     def _execute_np(self, stream: np.ndarray) -> np.ndarray:
-        """The whole block as gathers + gemms + the segment fold, in the
-        interpreter's exact association order."""
+        """The whole block as gathers + engine MACs + the segment fold,
+        in the interpreter's exact association order."""
         s, plan = self.sched, self.plan
+        engine, handle = self.engine, self.handle
+        # engine input domain, once per run (identity for exact; static
+        # per-layer int quantization for CIM/Pallas — elementwise, so it
+        # commutes with the gathers below)
+        stream = engine.quant_stream(handle, stream)
         b = stream.shape[0]
         ef = plan.fires
-        prod = np.empty((b * ef, s.c_out), np.float64)  # gemm scratch
         gsum: Optional[np.ndarray] = None
         for lo, hi in plan.segments:
             acc: Optional[np.ndarray] = None
             for t in range(lo, hi):
                 tt = plan.tiles[t]
-                w = self.weights[t]
-                # per-tile MAC map: zeros then += gemm per tap, d order
-                # (matches _pe_mac's accumulation exactly)
-                m = np.zeros((b * ef, s.c_out), np.float64)
+                # the gathered patch columns are the tile's packed-tap
+                # window — the same taps _pe_mac feeds the engine, whose
+                # per-tap accumulation order is fixed inside tile_mac
+                taps = []
                 for d in range(tt.pack):
                     patch = stream[:, tt.gather[d]]
                     if tt.c_lo != 0 or tt.c_hi != s.c_in:
                         patch = patch[:, :, tt.c_lo:tt.c_hi]
-                    gemm_rows(patch.reshape(b * ef, -1), w[d], out=prod)
-                    m += prod
-                m = m.reshape(b, ef, s.c_out)
+                    taps.append(patch.reshape(b * ef, -1))
+                m = engine.tile_mac(handle, t, taps,
+                                    quantized=True).reshape(b, ef, s.c_out)
                 # chain: own MAC + west psum (acc = mac; acc += west)
                 acc = m if acc is None else m + acc
             # group fold: chain total + running group-sum from the north
@@ -221,10 +235,12 @@ class TraceExecutor:
         return self._tail_np(gsum.reshape(b, s.e, s.f, s.c_out))
 
     def _tail_np(self, out: np.ndarray) -> np.ndarray:
-        """Block-tail M-type program: bias, activation, Fig. 9 pooling —
-        each fold replayed in the interpreter's operand order."""
+        """Block-tail M-type program: dequantization (quantized engines),
+        bias, activation, Fig. 9 pooling — each fold replayed in the
+        interpreter's operand order."""
         s = self.sched
         b = out.shape[0]
+        out = self.engine.finalize_conv(self.handle, out)
         if self.bias is not None:
             out = out + self.bias
         if s.tail.activation == "relu":

@@ -135,11 +135,13 @@ def validate_bitwise(cnn: CNNConfig, winner: Candidate,
 def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
             validate: str = "cifar10",
             space_factory: Optional[Callable[[CNNConfig], DesignSpace]]
-            = None) -> List[ModelReport]:
+            = None, cim_spec=None) -> List[ModelReport]:
     """Search each model's space and assemble reports.
 
     ``validate``: "none", "cifar10" (default: bitwise-check winners of
-    simulable CIFAR-sized models only) or "all".
+    simulable CIFAR-sized models only) or "all".  ``cim_spec`` (a
+    ``CIMSpec``) scores candidates with the precision-aware quantized
+    energy model, so the Pareto fronts report quantized TOPS/W.
     """
     reports = []
     for name in models:
@@ -148,7 +150,7 @@ def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
         space = space_factory(cnn) if space_factory else DesignSpace(
             cnn, dup_caps=(dup_cap,))
         result = search(cnn, space, budget=budget, seed=seed,
-                        dup_cap=dup_cap)
+                        dup_cap=dup_cap, cim_spec=cim_spec)
         winner = result.winner()
         validated: Optional[bool] = None
         if validate == "all" or (validate == "cifar10"

@@ -18,6 +18,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.cnn import CNNConfig
+from repro.core.cim import CIMSpec  # noqa: F401  (annotation: cim_spec=)
 from repro.core.energy import analyze_plan
 from repro.core.mapping import NetworkPlan
 from repro.core.noc import Placement
@@ -35,6 +36,7 @@ class Score:
     max_link_bytes: float   # NoC hotspot (minimize)
     total_byte_hops: float  # routed traffic volume x distance (minimize)
     energy_uj: float        # per-inference total, for the report
+    adc_share: float = 0.0  # ADC fraction of total (precision-aware scoring)
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -44,6 +46,7 @@ class Score:
             "max_link_bytes": self.max_link_bytes,
             "total_byte_hops": self.total_byte_hops,
             "energy_uj": self.energy_uj,
+            "adc_share": self.adc_share,
         }
 
 
@@ -71,8 +74,15 @@ def routed_traffic(plan: NetworkPlan, placement: Placement,
     return total, max(per_link.values(), default=0.0)
 
 
-def evaluate(cnn: CNNConfig, built: Built) -> Candidate:
-    rep = analyze_plan(cnn, built.plan, placement=built.placement)
+def evaluate(cnn: CNNConfig, built: Built,
+             cim_spec: "CIMSpec | None" = None) -> Candidate:
+    """Score one built mapping.  ``cim_spec`` engages the precision-aware
+    CIM energy model (``core/energy.py``) so the Pareto front reports
+    *quantized* TOPS/W — ADC conversion energy scaling with ``adc_bits``
+    over the mapping's actual subarray count — instead of the flat
+    fully-utilized Tab. 4 anchor."""
+    rep = analyze_plan(cnn, built.plan, placement=built.placement,
+                       cim_spec=cim_spec)
     byte_hops, max_link = routed_traffic(built.plan, built.placement, cnn)
     return Candidate(
         config=built.config, plan=built.plan, placement=built.placement,
@@ -83,6 +93,7 @@ def evaluate(cnn: CNNConfig, built: Built) -> Candidate:
             max_link_bytes=max_link,
             total_byte_hops=byte_hops,
             energy_uj=rep.e_total * 1e6,
+            adc_share=rep.adc_share,
         ))
 
 
@@ -129,13 +140,15 @@ def baseline_config(dup_cap: int) -> MappingConfig:
 def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
            budget: int = 128, seed: int = 0,
            dup_cap: Optional[int] = None,
-           objective: Callable[[Score], float] = byte_hop_objective
-           ) -> SearchResult:
+           objective: Callable[[Score], float] = byte_hop_objective,
+           cim_spec: "CIMSpec | None" = None) -> SearchResult:
     """Explore ``space`` with at most ``budget`` evaluations.
 
     Small spaces sweep exhaustively; larger ones run seeded simulated
     annealing (restart hill-climb with a geometric temperature ladder).
-    The snake baseline is always evaluated and included.
+    The snake baseline is always evaluated and included.  ``cim_spec``
+    scores every candidate with the precision-aware quantized energy
+    model (see :func:`evaluate`).
     """
     if space is None:
         space = DesignSpace(cnn)
@@ -145,7 +158,7 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
     if base_built is None:
         raise ValueError(f"{cnn.name}: the snake baseline itself is "
                          "infeasible — space misconfigured")
-    baseline = evaluate(cnn, base_built)
+    baseline = evaluate(cnn, base_built, cim_spec)
 
     seen: Dict[MappingConfig, Candidate] = {baseline.config: baseline}
     evals = 1
@@ -160,7 +173,7 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
         evals += 1
         if built is None:
             return None
-        cand = evaluate(cnn, built)
+        cand = evaluate(cnn, built, cim_spec)
         seen[cfg] = cand
         return cand
 

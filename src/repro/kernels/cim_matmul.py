@@ -34,7 +34,7 @@ from repro.core.cim import CIMSpec, DEFAULT_SPEC
 
 
 def _cim_kernel(x_ref, w_ref, o_ref, *, nk: int, inv_step: float, step: float,
-                q_max: int):
+                q_max: int, emit_codes: bool):
     """One (bm, bn) output block; K-steps iterate subarrays."""
     k = pl.program_id(2)
 
@@ -56,23 +56,29 @@ def _cim_kernel(x_ref, w_ref, o_ref, *, nk: int, inv_step: float, step: float,
     # digital accumulation of codes (integers — exact in f32)
     o_ref[...] += codes
 
-    @pl.when(k == nk - 1)
-    def _scale():
-        o_ref[...] *= step
+    if not emit_codes:
+        @pl.when(k == nk - 1)
+        def _scale():
+            o_ref[...] *= step
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "block_m", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("spec", "block_m", "block_n", "interpret", "emit_codes"),
 )
 def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
                       spec: CIMSpec = DEFAULT_SPEC,
                       block_m: int = 256, block_n: int = 256,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool = True,
+                      emit_codes: bool = False) -> jax.Array:
     """(M, K) int8 @ (K, N) int8 -> (M, N) f32 through the CIM pipeline.
 
     Pads every dim to its block multiple; K blocks are ``spec.n_c`` wide so
     each K-step is one subarray.  ``interpret=True`` runs the kernel body
     in Python on CPU (validation target); on a real TPU pass False.
+    ``emit_codes=True`` skips the final step scaling and returns the raw
+    digitally-accumulated ADC code sums (integers in f32) — the quantity
+    the engine layer accumulates along a tile chain.
     """
     m, k_dim = xq.shape
     k2, n = wq.shape
@@ -92,7 +98,7 @@ def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
 
     kernel = functools.partial(
         _cim_kernel, nk=nk, inv_step=spec.adc_inv_step, step=spec.adc_step,
-        q_max=spec.q_max,
+        q_max=spec.q_max, emit_codes=emit_codes,
     )
     kwargs = {}
     if _COMPILER_PARAMS is not None and not interpret:

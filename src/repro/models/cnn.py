@@ -64,8 +64,15 @@ def _conv(x, w, layer: ConvLayer, cim: Optional[CIMSpec]):
 
 
 def cnn_forward(params, images, cnn: CNNConfig,
-                cim: Optional[CIMSpec] = None) -> jax.Array:
-    """images: (B, H, W, 3) -> logits (B, classes)."""
+                cim: Optional[CIMSpec] = None,
+                capture: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, classes).
+
+    ``capture`` (a dict, filled in place) records every layer's *input*
+    activation — the tensor the Domino block would stream — keyed by
+    layer name; the quantized PE engines calibrate their per-layer
+    activation scale and ADC gain from it (``core/engine.py``).
+    """
     x = images
     saved: Dict[str, jax.Array] = {}
     layers: List = list(cnn.layers)
@@ -78,6 +85,8 @@ def cnn_forward(params, images, cnn: CNNConfig,
                     x = jnp.mean(x, axis=(1, 2))  # global average pool
                 else:
                     x = x.reshape(x.shape[0], -1)
+            if capture is not None:
+                capture[layer.name] = x
             if cim is None:
                 x = x @ params[layer.name]
             else:
@@ -89,10 +98,14 @@ def cnn_forward(params, images, cnn: CNNConfig,
 
         if layer.name.endswith("_a"):
             saved["block_in"] = x
+        if capture is not None:
+            capture[layer.name] = x
         y = _conv(x, params[layer.name], layer, cim)
         if layer.residual_from is not None:
             nxt = layers[i + 1] if i + 1 < len(layers) else None
             if isinstance(nxt, ConvLayer) and nxt.name.endswith("_sc"):
+                if capture is not None:
+                    capture[nxt.name] = saved["block_in"]
                 shortcut = _conv(saved["block_in"], params[nxt.name], nxt, cim)
                 i += 1  # consume the shortcut layer
             else:
@@ -106,3 +119,12 @@ def cnn_forward(params, images, cnn: CNNConfig,
                 (1, layer.pool_s, layer.pool_s, 1), "VALID")
         i += 1
     return x
+
+
+def collect_layer_inputs(params, images, cnn: CNNConfig
+                         ) -> Dict[str, jax.Array]:
+    """Float forward pass capturing each layer's input activation — the
+    calibration hook for the quantized PE engines."""
+    capture: Dict[str, jax.Array] = {}
+    cnn_forward(params, images, cnn, capture=capture)
+    return capture

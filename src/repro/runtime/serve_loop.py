@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.engine import is_quantized_leaf as _is_q_leaf
 from repro.models import encdec as ED
 from repro.models import transformer as T
 from repro.models.common import ShardingPlan, resolve_w
@@ -60,7 +61,13 @@ def quantize_decisions(params, min_size: int = 1 << 14) -> Dict[str, bool]:
 def quantize_params_for_serving(params, min_size: int = 1 << 14,
                                 decisions: Optional[Dict[str, bool]] = None):
     """Quantize selected matmul weights to int8 + per-column scale
-    (Domino: 8-bit weights resident in the arrays)."""
+    (Domino: 8-bit weights resident in the arrays).
+
+    Consumers of the ``{"q", "s"}`` leaves: the LM layers dequantize on
+    use through ``models/common.py::resolve_w``; the Domino CNN serving
+    path (:func:`build_stream_sim`) hands them to the quantized
+    ``CIMEngine`` which keeps the int8 weights resident.  The explicit
+    float route is :func:`dequantize_params`."""
     from repro.core.cim import quantize_symmetric
 
     if decisions is None:
@@ -74,6 +81,36 @@ def quantize_params_for_serving(params, min_size: int = 1 << 14,
         return leaf
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def quantize_cnn_params_for_serving(params: Dict[str, Any]
+                                    ) -> Dict[str, Any]:
+    """Domino CNN flavor of :func:`quantize_params_for_serving`: every
+    conv kernel / FC matrix becomes ``{"q": int8, "s": (M,)}`` with the
+    per-output-column scale taken over the *flattened contraction*
+    (K*K*C) — the crossbar-resident layout the ``CIMEngine`` consumes
+    directly (``core/engine.py::quantize_weight``, so re-quantizing
+    float params on the engine yields bit-identical weights)."""
+    from repro.core.engine import quantize_weight
+
+    out = {}
+    for name, w in params.items():
+        q, s = quantize_weight(np.asarray(w))
+        out[name] = {"q": q, "s": s}
+    return out
+
+
+def dequantize_params(params):
+    """The explicit float route for ``{"q", "s"}`` quantized leaves —
+    works on both the LM pytree and the Domino CNN name->array dict.
+    Non-quantized leaves pass through untouched."""
+    def one(leaf):
+        if _is_q_leaf(leaf):
+            return np.asarray(leaf["q"], np.float32) * np.asarray(
+                leaf["s"], np.float32)
+        return leaf
+
+    return jax.tree_util.tree_map(one, params, is_leaf=_is_q_leaf)
 
 
 @dataclass
@@ -242,6 +279,25 @@ class StreamServeReport:
         """Per-request latency percentiles in cycles (keys ``p50``...)."""
         return {f"p{q}": float(np.percentile(self.latency_cycles, q))
                 for q in qs}
+
+
+def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
+    """Serving-side constructor for the streaming simulator.
+
+    Wires the quantized-weights serving route end-to-end: params carrying
+    ``{"q", "s"}`` leaves (from :func:`quantize_cnn_params_for_serving`)
+    run the ``CIMEngine`` path by default — the int8 weights stay
+    resident, never dequantized — while float params run the exact
+    engine.  Pass ``engine=`` to override (e.g. ``"pallas"``), or
+    dequantize explicitly with :func:`dequantize_params` to serve a
+    quantized checkpoint on the exact engine."""
+    from repro.core.network import NetworkSimulator
+
+    if engine is None:
+        quantized = any(_is_q_leaf(v) for v in params.values())
+        engine = "cim" if quantized else "exact"
+    return NetworkSimulator(cnn, params, backend="trace", streaming=True,
+                            engine=engine, **kw)
 
 
 def serve_stream(sim, frames: np.ndarray,

@@ -205,3 +205,30 @@ def test_fc_on_the_move_matches_oracle(c_in, c_out, n_c, n_m):
     got = simulate_fc(x, w, n_c, n_m, counters=cnt)
     np.testing.assert_array_equal(got, x @ w)
     assert cnt.macs == c_in * c_out
+
+
+def test_fc_activation_only_at_column_tail():
+    """Regression for the M-type flag alias: the FC chain-add used to be
+    encoded as the C-type ``SUM_ADD`` bit inside an M-type word, where
+    bit 0 reads as ``ACT_EN`` — so deep FC chains ReLU-clipped
+    *intermediate* partial sums whenever one went negative, diverging
+    from the jax reference ``relu(x @ W)`` (the VGG-16/19 FC heads hit
+    this).  The chain-add now rides the rx north-receive enable; the
+    activation must fire exactly once, at the column tail."""
+    from repro.core.instructions import ACT_EN, Instruction, Port
+    from repro.core.schedule import compile_fc_block
+
+    rng = np.random.default_rng(0)
+    # data engineered so intermediate psums go negative: the old aliased
+    # decode clipped them mid-chain and got this wrong
+    x = rng.integers(0, 60, (3, 2048)).astype(np.float64) * 7
+    w = rng.integers(-1, 2, (2048, 300)).astype(np.float64)
+    got = simulate_fc(x, w, 256, 128, activation="relu")
+    np.testing.assert_array_equal(got, np.maximum(x @ w, 0.0))
+    # the emitted tables themselves: ACT_EN decodes ONLY at the last
+    # grid row; the chain-add is the rx north-receive enable
+    m_t, m_a, tables = compile_fc_block("fc", 2048, 300, 256, 128, "relu")
+    for i in range(m_t):
+        ins = Instruction.decode(tables[i][0][0])
+        assert ins.has(ACT_EN) == (i == m_t - 1), i
+        assert ins.rx_from(Port.N) == (i > 0), i

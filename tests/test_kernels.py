@@ -87,8 +87,52 @@ def test_jnp_fast_path_matches_ref():
     )
 
 
-# Circuit-level equivalence property tests (paper §4.5 numerics) live in
-# test_property.py behind the optional hypothesis dependency.
+# The padding edge cases the round-number SHAPES sweep never exercises:
+# K not a multiple of n_c, M/N not multiples of the block size, B=1.  The
+# jnp fast path and the Pallas kernel must emit *bitwise-identical ADC
+# codes* on all of them (the engine layer accumulates these digitally —
+# a single differing code would break cim-vs-pallas bitwise equality).
+RAGGED = [
+    (1, 300, 7),       # B=1, K % n_c != 0, tiny N
+    (1, 129, 1),       # single row, single column, one ragged subarray
+    (5, 257, 10),      # K just over one subarray
+    (3, 511, 129),     # N just over the 128-lane block
+    (9, 1000, 131),    # everything off-size
+]
+
+
+def _jnp_adc_codes(xq, wq, spec):
+    """Raw digitally-accumulated ADC codes of the jnp reference path."""
+    from repro.core.cim import adc_quantize
+
+    k = wq.shape[0]
+    pad = (-k) % spec.n_c
+    if pad:
+        xq = jnp.pad(xq, ((0, 0), (0, pad)))
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+    n_sub = (k + pad) // spec.n_c
+    xs = xq.reshape(xq.shape[0], n_sub, spec.n_c).astype(jnp.int32)
+    ws = wq.reshape(n_sub, spec.n_c, -1).astype(jnp.int32)
+    d = jnp.einsum("msk,skn->msn", xs, ws)
+    return jnp.sum(adc_quantize(d, spec), axis=1)
+
+
+@pytest.mark.parametrize("m,k,n", RAGGED)
+def test_pallas_codes_bitwise_vs_jnp_ragged(m, k, n):
+    key = jax.random.PRNGKey(m * 31 + k * 5 + n)
+    k1, k2 = jax.random.split(key)
+    xq = _rand_int8(k1, (m, k))
+    wq = _rand_int8(k2, (k, n))
+    spec = CIMSpec(n_c=128, adc_bits=6, gain=5.0)
+    codes_ref = np.asarray(_jnp_adc_codes(xq, wq, spec), np.int32)
+    codes_pl = np.asarray(
+        cim_matmul_pallas(xq, wq, spec, interpret=True, emit_codes=True))
+    assert np.all(codes_pl == np.round(codes_pl))  # integers in f32
+    assert codes_pl.astype(np.int32).tobytes() == codes_ref.tobytes()
+    # and the step-scaled outputs are bitwise-equal f32 too
+    out_jnp = np.asarray(cim_matmul(xq, wq, spec))
+    out_pl = np.asarray(cim_matmul_pallas(xq, wq, spec, interpret=True))
+    assert out_jnp.tobytes() == out_pl.tobytes()
 
 
 def test_cim_linear_accuracy():

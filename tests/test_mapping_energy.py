@@ -120,6 +120,73 @@ def test_offchip_energy_is_zero():
         assert analyze(CNN_BENCHMARKS[name]()).e_offchip == 0.0
 
 
+def test_precision_aware_cim_split():
+    """cim_spec engages the component model: the split sums to e_cim,
+    the flat Tab. 4 anchor stays the default, and a fully-utilized
+    subarray reproduces the 48.1 fJ/MAC figure exactly."""
+    from repro.core.cim import CIMSpec
+    from repro.core.energy import E_MAC, adc_conversions
+    from repro.configs.cnn import CNNConfig
+
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    flat = analyze(cnn)
+    assert flat.e_cim == flat.macs * E_MAC  # the anchor, untouched
+    assert flat.e_cim_adc == 0.0 and flat.adc_share == 0.0
+
+    rep = analyze(cnn, cim_spec=CIMSpec())
+    assert rep.e_cim == pytest.approx(
+        rep.e_cim_array + rep.e_cim_input + rep.e_cim_adc)
+    assert rep.n_adc_conversions == adc_conversions(plan_network(cnn))
+    assert 0 < rep.adc_share < 0.5
+    # non-CIM terms are engine-independent
+    assert rep.e_moving == flat.e_moving and rep.e_memory == flat.e_memory
+
+    # fully-utilized geometry (C == N_c: each tile holds exactly one full
+    # subarray) reproduces the flat per-MAC figure by calibration
+    full = CNNConfig("full", "cifar10", 8, (
+        ConvLayer("c0", 8, 8, 256, 256, k=3),))
+    f_flat = analyze(full)
+    f_spec = analyze(full, cim_spec=CIMSpec())
+    assert f_spec.e_cim == pytest.approx(f_flat.e_cim, rel=1e-12)
+
+
+def test_adc_energy_scales_with_bits():
+    """SAR conversion energy falls ~2x per dropped bit; lower-resolution
+    converters raise the quantized CE (the accuracy/energy trade the
+    README table reports)."""
+    from repro.core.cim import CIMSpec
+
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    reps = {b: analyze(cnn, cim_spec=CIMSpec(adc_bits=b)) for b in (4, 6, 8)}
+    assert reps[4].e_cim_adc < reps[6].e_cim_adc < reps[8].e_cim_adc
+    assert reps[8].e_cim_adc == pytest.approx(4 * reps[6].e_cim_adc)
+    assert reps[4].ce_tops_per_w > reps[8].ce_tops_per_w
+    # array/input terms depend on a_bits, not adc_bits
+    assert reps[4].e_cim_array == reps[8].e_cim_array
+    assert reps[4].e_cim_input == reps[8].e_cim_input
+
+
+def test_dse_scores_quantized_tops_per_w():
+    """cim_spec threads through DSE scoring: candidates carry the
+    quantized CE and the ADC share."""
+    from repro.core.cim import CIMSpec
+    from repro.dse.search import search
+    from repro.dse.space import DesignSpace
+
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    space = DesignSpace(cnn, strategy_names=("snake",), aspects=(1.0,),
+                        reuses=(1,), dup_caps=(64,))
+    plain = search(cnn, space, budget=4, seed=0)
+    quant = search(cnn, space, budget=4, seed=0,
+                   cim_spec=CIMSpec(adc_bits=8))
+    assert plain.baseline.score.adc_share == 0.0
+    assert quant.baseline.score.adc_share > 0.0
+    assert quant.baseline.score.tops_per_w != plain.baseline.score.tops_per_w
+    # placement-independent axes are untouched by the spec
+    assert quant.baseline.score.total_byte_hops == \
+        plain.baseline.score.total_byte_hops
+
+
 def test_energy_scales_with_reuse():
     """Block reuse shrinks the chip but not the per-inference energy much;
     throughput drops by ~the reuse factor."""
