@@ -11,6 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   steady-state initiation interval from the simulated stage timeline
   vs ``plan_network``'s analytic bound, per-frame OFMs bitwise-checked
   against the sequential trace run
+* ``cim_*`` — quantized CIM accuracy/energy rows (vgg11, adc 8/6/4) and
+  ``cim_<model>_trace`` rows timing the fused integer-native quantized
+  trace path against the exact trace on every model (the embedded
+  ``ratio_vs_exact`` is gated at 2x by ``--check-regress``)
 * ``roofline_*`` — summary of the dry-run roofline table if present
   (skipped with a note when ``results/dryrun.json`` is absent — a
   placeholder row is never written)
@@ -421,12 +425,75 @@ def bench_cim():
     return rows
 
 
+#: quantized trace must stay within 2x of the exact trace per-sample —
+#: the fused integer lowering's contract (checked live by ``--cim-smoke``
+#: and on the committed rows by ``--check-regress``)
+QUANT_TRACE_THRESHOLD = 2.0
+
+#: timing reps for the quantized-vs-exact ratio rows (min-of-reps: the
+#: CI box is a single shared core and individual passes jitter wildly)
+CIM_TRACE_REPS = {"cifar10": 3, "imagenet": 2}
+
+
+def bench_cim_trace():
+    """Compiled quantized trace rows (``cim_*_trace``): every model at
+    adc_bits=8 through the fused integer-native trace lowering vs the
+    exact trace path on the same frames — per-sample wall time for both
+    and their ratio.  The ratio is measured in one pass (same frames,
+    same box, min-of-reps for both paths), so it self-normalizes away
+    host noise; ``--check-regress`` gates the committed ratio at
+    ``QUANT_TRACE_THRESHOLD`` instead of speed-gating the absolute time
+    (which would include calibration and gate scheduler noise).
+    Bitwise interp==trace==streaming equality for the quantized path is
+    covered by ``--cim-smoke`` and the test suite, not re-run here."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.network import NetworkSimulator
+
+    rows = []
+    for name in CNN_BENCHMARKS:
+        rng = np.random.default_rng(0)
+        cnn = CNN_BENCHMARKS[name]()
+        params = _bench_params(cnn, rng)
+        hw = cnn.input_hw
+        b = 4 if cnn.dataset == "cifar10" else 2
+        reps = CIM_TRACE_REPS[cnn.dataset]
+        frames = rng.random((b, hw, hw, 3))
+        dup_cap = 128 if name == "resnet50-imagenet" else 64
+        t0 = time.perf_counter()
+        quant = NetworkSimulator(cnn, params, backend="trace", engine="cim",
+                                 calib_images=frames[:1], dup_cap=dup_cap)
+        quant.run(frames[:1])  # build handles / quantize weights once
+        calib_s = time.perf_counter() - t0
+        exact = NetworkSimulator(cnn, params, backend="trace",
+                                 dup_cap=dup_cap)
+        exact.run(frames[:1])
+        us_q = us_e = float("inf")
+        for _ in range(reps):  # interleaved: both paths see the same load
+            t0 = time.perf_counter()
+            quant.run(frames)
+            us_q = min(us_q, (time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            exact.run(frames)
+            us_e = min(us_e, (time.perf_counter() - t0) * 1e6)
+        ratio = us_q / us_e
+        rows.append((
+            f"cim_{name}_trace", us_q,
+            f"per_sample_us={us_q / b:.0f} exact_per_sample_us={us_e / b:.0f} "
+            f"ratio_vs_exact={ratio:.2f}x calib_s={calib_s:.1f} adc_bits=8"))
+    return rows
+
+
 def cim_smoke(seed: int = 0) -> int:
     """Bounded CI smoke (``--cim-smoke``): non-zero exit on any ADC-code
     mismatch between engines — (1) a conv block through the CIM vs
-    Pallas engines on both backends, (2) two fixed-seed vgg11 frames
-    through the pipelined CIM executor vs the sequential trace run, and
-    interp vs trace on one frame."""
+    Pallas engines on both backends, including the fused vs per-tile vs
+    jitted trace lowerings, (2) two fixed-seed vgg11 frames through the
+    pipelined CIM executor vs the sequential trace run, and interp vs
+    trace on one frame — and (3) on a quantized-vs-exact trace wall-time
+    ratio above ``QUANT_TRACE_THRESHOLD`` (measured min-of-reps on the
+    same frames in the same pass, so host noise divides out)."""
     import numpy as np
 
     from repro.configs.cnn import CNN_BENCHMARKS
@@ -453,6 +520,10 @@ def cim_smoke(seed: int = 0) -> int:
     outs = {
         "cim/interp": BlockSimulator(sched, wts, engine=cim).run(ifm),
         "cim/trace": TraceExecutor(sched, wts, engine=cim).run(ifm),
+        "cim/trace-pertile": TraceExecutor(sched, wts, engine=cim,
+                                           fused=False).run(ifm),
+        "cim/trace-jit": TraceExecutor(sched, wts, engine=cim,
+                                       use_jax=True).run(ifm),
         "pallas/interp": BlockSimulator(sched, wts, engine=pal).run(ifm),
         "pallas/trace": TraceExecutor(sched, wts, engine=pal).run(ifm),
     }
@@ -479,9 +550,31 @@ def cim_smoke(seed: int = 0) -> int:
     if it.logits.tobytes() != seq.logits[:1].tobytes():
         print("cim-smoke: interp vs trace logits mismatch")
         ok = False
+
+    # (3) speed contract: the fused quantized trace must stay within
+    # QUANT_TRACE_THRESHOLD of the exact trace on the same frames —
+    # min-of-reps on both paths in one interleaved pass so shared-box
+    # noise divides out of the ratio
+    exact_sim = NetworkSimulator(cnn, params, backend="trace")
+    exact_sim.run(frames[:1])  # warm both before timing
+    sim.run(frames[:1])
+    us_q = us_e = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sim.run(frames)
+        us_q = min(us_q, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        exact_sim.run(frames)
+        us_e = min(us_e, time.perf_counter() - t0)
+    ratio = us_q / us_e
+    if ratio > QUANT_TRACE_THRESHOLD:
+        print(f"cim-smoke: quantized trace {ratio:.2f}x exact trace "
+              f"(> {QUANT_TRACE_THRESHOLD}x)")
+        ok = False
     print(f"cim-smoke: {'ok' if ok else 'FAIL'} — block cim==pallas on "
-          f"both backends, vgg11 stream==seq and interp==trace under "
-          f"engine='cim' (II={sres.measured_ii})")
+          f"both backends (fused==per-tile==jit), vgg11 stream==seq and "
+          f"interp==trace under engine='cim' (II={sres.measured_ii}), "
+          f"quantized/exact trace ratio {ratio:.2f}x")
     return 0 if ok else 1
 
 
@@ -563,7 +656,11 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     if any committed ``cim_*`` row carries a ``False`` match field
     (the live engines themselves are gated by ``--cim-smoke``); their
     wall time includes one-off calibration and jit warmup, so a speed
-    ratio on them would gate noise, not code.
+    ratio on them would gate noise, not code.  ``cim_*_trace`` rows are
+    the exception: each embeds its own self-normalized
+    ``ratio_vs_exact`` (both paths timed on the same frames in the same
+    pass), and the gate fails if any model's committed ratio exceeds
+    ``QUANT_TRACE_THRESHOLD`` or its row is missing.
 
     Each bench runs twice and the per-row *minimum* is compared —
     wall-clock on a small shared CI box jitters by tens of percent, and
@@ -582,6 +679,32 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     if bad_match:
         print("check-regress: FAIL — committed cim_* rows carry a False "
               f"match field: {', '.join(bad_match)}")
+        return 1
+    # cim_*_trace ratio gate: the committed quantized-vs-exact trace
+    # ratio (self-normalized — both paths timed on the same frames in
+    # the same pass, see bench_cim_trace) must stay within
+    # QUANT_TRACE_THRESHOLD on every model, and every model must have a
+    # row — a vanished row would silently stop covering that model
+    import re
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+
+    trace_rows = {r["name"]: r["derived"] for r in brows
+                  if r["name"].startswith("cim_")
+                  and r["name"].endswith("_trace")}
+    bad_ratio = []
+    for model in CNN_BENCHMARKS:
+        name = f"cim_{model}_trace"
+        derived = trace_rows.get(name)
+        m = re.search(r"ratio_vs_exact=([\d.]+)x", derived or "")
+        if derived is None or not m:
+            bad_ratio.append(f"{name} missing")
+        elif float(m.group(1)) > QUANT_TRACE_THRESHOLD:
+            bad_ratio.append(f"{name} {m.group(1)}x")
+    if bad_ratio:
+        print("check-regress: FAIL — committed cim_*_trace rows exceed "
+              f"the {QUANT_TRACE_THRESHOLD}x quantized-vs-exact gate or "
+              f"are missing: {', '.join(bad_ratio)}")
         return 1
     benches = [globals()[name] for name in SIM_BENCHES]
     fresh = {}
@@ -659,7 +782,8 @@ def main(argv=None) -> None:
     benches = [bench_tab4, bench_fig7, bench_fig11, bench_fig12,
                bench_kernels, bench_simulator, bench_sim_batched,
                bench_network_sim, bench_network_sim_resnet,
-               bench_network_stream, bench_cim, bench_roofline_summary]
+               bench_network_stream, bench_cim, bench_cim_trace,
+               bench_roofline_summary]
     if args.dse:
         benches.append(bench_dse)
     for fn in benches:

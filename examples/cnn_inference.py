@@ -17,8 +17,12 @@ bound, and per-frame logits stay bitwise-equal to the sequential run).
 (``core/engine.py``): ``exact`` float64 (default), ``cim`` w8a8 +
 per-subarray ADC, or ``pallas`` (the same numerics through the Pallas
 kernel, ADC-code-exact vs ``cim``) — printing the per-class logit
-divergence vs the exact run and the ADC share of the precision-aware
-energy total.
+divergence vs the exact run, the per-sample wall time of the compiled
+integer-native trace path vs the exact trace, and the ADC share of the
+precision-aware energy total.  Quantized engines run the fused trace
+lowering by default (``core/trace.py``): batched int8 gemms + one
+vectorized ADC conversion per layer, bitwise-equal to the per-tile
+interpreter.
 """
 import argparse
 
@@ -105,8 +109,13 @@ def main():
         k: rng.integers(-1, 2, np.asarray(v).shape).astype(np.float64)
         for k, v in params.items()
     }
+    import time
+
     xb = rng.integers(0, 2, (4, 32, 32, 3)).astype(np.float64)
-    res = NetworkSimulator(cnn, int_params, backend="trace").run(xb)
+    exact_sim = NetworkSimulator(cnn, int_params, backend="trace")
+    t0 = time.perf_counter()
+    res = exact_sim.run(xb)
+    exact_us = (time.perf_counter() - t0) * 1e6 / len(xb)
     ref = np.asarray(cnn_forward(
         {k: jnp.asarray(v, jnp.float32) for k, v in int_params.items()},
         jnp.asarray(xb, jnp.float32), cnn))
@@ -125,7 +134,10 @@ def main():
 
         qsim = NetworkSimulator(cnn, int_params, backend="trace",
                                 engine=args.engine)
+        qsim.run(xb[:1])  # warm: quantize weights / build handles once
+        t0 = time.perf_counter()
         qres = qsim.run(xb)
+        quant_us = (time.perf_counter() - t0) * 1e6 / len(xb)
         spec = qsim.pe_engine.spec
         scale = np.abs(res.logits).mean()
         per_class = np.abs(qres.logits - res.logits).mean(axis=0) / scale
@@ -134,6 +146,9 @@ def main():
               f"{spec.adc_bits}b ADC): top-1 agreement vs exact "
               f"{agree*100:.0f}%, per-class relative logit divergence: "
               + " ".join(f"{d:.4f}" for d in per_class))
+        print(f"compiled quantized trace: {quant_us:.0f} us/sample "
+              f"(exact trace {exact_us:.0f} us/sample, "
+              f"ratio {quant_us / exact_us:.2f}x)")
         qrep = analyze(cnn, cim_spec=spec)
         qb = qrep.breakdown()
         print(f"precision-aware energy: array={qb['cim_array_uJ']:.2f}uJ "

@@ -20,6 +20,9 @@ python -m benchmarks.run --stream-smoke
 # validated against the snake baseline (<30 s; exits non-zero on mismatch)
 python -m repro.dse --smoke --seed 0
 # bounded quantized-engine smoke: CIM vs Pallas ADC codes on a conv block
-# (both backends) + 2 vgg11 frames under engine="cim" (stream==seq,
-# interp==trace); exits non-zero on any code mismatch between engines
+# (both backends, fused == per-tile == jitted trace lowerings) + 2 vgg11
+# frames under engine="cim" (stream==seq, interp==trace) + the compiled
+# quantized trace timed against the exact trace on the same frames;
+# exits non-zero on any code mismatch between engines/lowerings or a
+# quantized/exact wall-time ratio above 2x
 python -m benchmarks.run --cim-smoke

@@ -140,30 +140,58 @@ def adc_dequantize(codes: jax.Array, spec: CIMSpec) -> jax.Array:
     return codes.astype(jnp.float32) * spec.adc_step
 
 
-def calibrate_gain(x: jax.Array, w: jax.Array, spec: CIMSpec,
-                   percentile: float = 100.0) -> float:
+def adc_convert(d: np.ndarray, inv_step32: np.float32,
+                code_lo: float, code_hi: float) -> np.ndarray:
+    """The SAR conversion on exact integer dots, **shared verbatim** by
+    every executor flavor (per-tile numpy, the fused batch-of-tiles trace
+    path, the FC grid) and bit-for-bit the jnp / Pallas-kernel arithmetic:
+    int32 -> float32, scale by the float32 inverse step, round
+    half-to-even, saturate.  Vectorized over any leading shape — one call
+    converts all subarrays of a layer at once.  Output is integer ADC
+    codes exact in float64, so downstream accumulation order is free.
+    """
+    d = np.asarray(d)
+    codes = np.round(d.astype(np.int32).astype(np.float32)
+                     * np.float32(inv_step32))
+    return np.clip(codes, code_lo, code_hi).astype(np.float64)
+
+
+def calibrate_gain(x, w, spec: CIMSpec, percentile: float = 100.0) -> float:
     """Pick the integration gain k so the `percentile` of subarray dots
     fills the ADC range (the knob the paper's current mirrors provide).
 
     Quantization here must mirror :func:`cim_linear_reference` exactly
     (per-column weight scales), else the computed gain saturates the ADC.
+    Pure numpy: the dots are exact small integers, so float64 BLAS
+    reproduces the int32 einsum bit-for-bit at a fraction of the jit
+    cost (calibration runs once per layer at network build).
     """
-    xq, _ = quantize_symmetric(x.reshape(-1, x.shape[-1]), spec.a_bits)
-    wq, _ = quantize_symmetric(w, spec.w_bits, axis=0)
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    xq = _quant_np(x.reshape(-1, x.shape[-1]), spec.a_bits)
+    wq = _quant_np(w, spec.w_bits, axis=0)
     k_dim = w.shape[0]
     pad = (-k_dim) % spec.n_c
     if pad:
-        xq = jnp.pad(xq, ((0, 0), (0, pad)))
-        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+        xq = np.pad(xq, ((0, 0), (0, pad)))
+        wq = np.pad(wq, ((0, pad), (0, 0)))
     n_sub = (k_dim + pad) // spec.n_c
-    xs = xq.reshape(-1, n_sub, spec.n_c).astype(jnp.int32)
-    ws = wq.reshape(n_sub, spec.n_c, -1).astype(jnp.int32)
-    d = jnp.einsum("bsk,skn->bsn", xs, ws)
-    mag = jnp.percentile(jnp.abs(d).astype(jnp.float32), percentile)
-    mag = float(np.asarray(mag))
+    xs = xq.reshape(-1, n_sub, spec.n_c).transpose(1, 0, 2)
+    ws = wq.reshape(n_sub, spec.n_c, -1)
+    d = np.matmul(xs, ws)  # (n_sub, B, N) exact per-subarray integer dots
+    mag = float(np.percentile(np.abs(d).astype(np.float32), percentile))
     if mag <= 0:
         return 1.0
     return max(1.0, spec.full_scale / mag)
+
+
+def _quant_np(x: np.ndarray, bits: int, axis: Optional[int] = None
+              ) -> np.ndarray:
+    """Numpy mirror of :func:`quantize_symmetric` (int-valued float64)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = np.max(np.abs(x), axis=axis, keepdims=axis is not None)
+    scale = np.maximum(amax, 1e-8).astype(np.float32) / qmax
+    return np.clip(np.round(x / scale), -qmax - 1, qmax).astype(np.float64)
 
 
 # ---------------------------------------------------------------------------

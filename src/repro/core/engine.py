@@ -46,7 +46,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cim import CIMSpec, DEFAULT_SPEC, calibrate_gain, quantize_symmetric
+from repro.core.cim import (
+    CIMSpec,
+    DEFAULT_SPEC,
+    adc_convert,
+    calibrate_gain,
+    quantize_symmetric,
+)
 
 #: engine registry keys accepted by ``make_engine`` / ``NetworkSimulator``
 ENGINES = ("exact", "cim", "pallas")
@@ -61,15 +67,18 @@ ENGINES = ("exact", "cim", "pallas")
 
 
 def quantize_weight(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """(K, K, C, M) or (C_in, C_out) float -> (q int8 same shape, s (M,))."""
-    import jax.numpy as jnp
+    """(K, K, C, M) or (C_in, C_out) float -> (q int8 same shape, s (M,)).
 
-    w = np.asarray(w)
-    m = w.shape[-1]
-    q, s = quantize_symmetric(jnp.asarray(w.reshape(-1, m), jnp.float32),
-                              8, axis=0)
-    return (np.asarray(q).reshape(w.shape),
-            np.asarray(s, np.float64).reshape(m))
+    Pure numpy, elementwise-identical to ``quantize_symmetric`` in f32
+    (max / divide / round-half-even / clip are the same IEEE ops) — VGG's
+    100M-element FC matrices quantize in milliseconds at network build
+    instead of round-tripping through a per-shape jit."""
+    w32 = np.asarray(w, np.float32).reshape(-1, np.asarray(w).shape[-1])
+    amax = np.max(np.abs(w32), axis=0, keepdims=True)
+    s = np.maximum(amax, np.float32(1e-8)) / np.float32(127)
+    q = np.clip(np.round(w32 / s), -128, 127).astype(np.int8)
+    return (q.reshape(np.shape(w)),
+            np.asarray(s, np.float64).reshape(np.shape(w)[-1]))
 
 
 def dequantize_weight(q: np.ndarray, s: np.ndarray) -> np.ndarray:
@@ -125,6 +134,14 @@ class ConvHandle:
     code_lo: float = 0.0
     code_hi: float = 0.0
     spec: Optional[CIMSpec] = None      # per-layer spec (calibrated gain)
+    # batch-of-tiles view (quantized engines): every tile's resident
+    # weights stacked on a zero-padded common contraction depth, so the
+    # fused trace path runs ONE (T, R, kc) x (T, kc, M) batched exact
+    # integer gemm + one vectorized ADC conversion for the whole layer
+    kc: Optional[Tuple[int, ...]] = None      # per-tile pack * C_slice
+    w_stack: Optional[np.ndarray] = None      # (T, max kc, M) float64
+    w8_stack: Optional[np.ndarray] = None     # (T, max kc, M) int8
+    w8_sub: Optional[np.ndarray] = None       # (T * n_c, M) int8 (Pallas)
 
 
 @dataclass
@@ -291,10 +308,21 @@ class CIMEngine(PEEngine):
     name = "cim"
     needs_calibration = True
 
+    #: default activation-clip percentile (xBARSimV1-style percentile
+    #: clipping): the max-based scale let one outlier pixel stretch the
+    #: int8 range and starve every other activation of resolution
+    CLIP_PERCENTILE = 99.9
+
     def __init__(self, spec: CIMSpec = DEFAULT_SPEC,
-                 use_calibrated_gain: bool = True):
+                 use_calibrated_gain: bool = True,
+                 clip_percentile: Optional[float] = None):
         self.spec = spec
         self.use_calibrated_gain = use_calibrated_gain
+        self.clip_percentile = (self.CLIP_PERCENTILE if clip_percentile
+                                is None else float(clip_percentile))
+        if not 0.0 < self.clip_percentile <= 100.0:
+            raise ValueError(
+                f"clip_percentile must be in (0, 100]: {clip_percentile}")
         self.calib: Dict[str, LayerCalib] = {}
 
     # -- calibration ---------------------------------------------------------
@@ -307,20 +335,30 @@ class CIMEngine(PEEngine):
     def calibrate_layer(self, name, x, w):
         """Derive (a_scale, gain) from one layer's captured float input.
 
-        ``a_scale`` fills the int8 activation range with the observed
-        max; ``gain`` runs the paper's integration-gain calibration over
-        the layer's im2col'd contraction (conv kernels are flattened the
-        same way ``models/cnn.py`` feeds the CIM reference)."""
-        import jax.numpy as jnp
-
+        ``a_scale`` fills the int8 activation range with the
+        ``clip_percentile`` of observed magnitudes (percentile clipping:
+        the rare outlier saturates instead of stretching the whole
+        range — SNIPPETS.md snippet 1 / xBARSimV1 style); ``gain`` runs
+        the paper's integration-gain calibration over the layer's
+        im2col'd contraction (conv kernels are flattened the same way
+        ``models/cnn.py`` feeds the CIM reference)."""
         spec = self.spec
         x = np.asarray(x, np.float32)
-        a_scale = float(np.max(np.abs(x))) / spec.a_max
-        a_scale = max(a_scale, 1e-8)
+        mags = np.abs(x)
+        if self.clip_percentile >= 100.0:
+            a_obs = float(np.max(mags))
+        else:
+            a_obs = float(np.percentile(mags, self.clip_percentile))
+        a_scale = max(a_obs / spec.a_max, 1e-8)
         gain = None
         if self.use_calibrated_gain:
             cols, wmat = _calibration_matrix(x, np.asarray(w, np.float32))
-            gain = calibrate_gain(jnp.asarray(cols), jnp.asarray(wmat), spec)
+            if wmat.shape[1] > _CALIB_COLS:
+                # weight columns quantize independently (per-column
+                # scales), so a deterministic column stride is
+                # self-consistent — it just reads fewer ADC channels
+                wmat = wmat[:, ::math.ceil(wmat.shape[1] / _CALIB_COLS)]
+            gain = calibrate_gain(cols, wmat, spec)
         self.calib[name] = LayerCalib(a_scale=a_scale, gain=gain)
 
     def _layer_spec(self, name: str) -> Tuple[CIMSpec, float]:
@@ -360,10 +398,25 @@ class CIMEngine(PEEngine):
                 raise ValueError(
                     f"{name}: tile holds {tt.pack}x{tt.c_hi - tt.c_lo} "
                     f"weight rows > n_c={self.spec.n_c} — not one subarray")
+        # batch-of-tiles view: each tile's (pack * Cs, M) weight slab on a
+        # zero-padded common depth — padded rows contribute nothing to the
+        # exact integer dot, so the fused path's codes match the per-tile
+        # path's bit-for-bit.  Dots are exact in f32 whenever the
+        # subarray full-scale fits f32's integer range (n_c <= 1024 at
+        # w8a8) — half the BLAS traffic of f64 for bit-identical codes
+        m = q.shape[-1]
+        spec, _ = self._layer_spec(name)
+        dot_dt = np.float32 if spec.full_scale <= 2 ** 24 else np.float64
+        kc = tuple(tt.pack * (tt.c_hi - tt.c_lo) for tt in tiles)
+        w_stack = np.zeros((len(tiles), max(kc), m), dot_dt)
+        for i, tq in enumerate(tile_q):
+            w_stack[i, :kc[i]] = tq.reshape(kc[i], m)
         return ConvHandle(
-            name=name, c_out=q.shape[-1],
+            name=name, c_out=m,
             tile_w=[tq.astype(np.float64) for tq in tile_q],
             tile_w8=[tq.astype(np.int8) for tq in tile_q],
+            kc=kc, w_stack=w_stack,
+            w8_stack=w_stack.astype(np.int8),
             **self._common(name, s),
         )
 
@@ -383,11 +436,11 @@ class CIMEngine(PEEngine):
         return np.clip(np.round(x / h.a_scale), -h.a_clip - 1, h.a_clip)
 
     def _adc(self, d: np.ndarray, h) -> np.ndarray:
-        """The SAR conversion, bit-for-bit the jnp/Pallas arithmetic:
-        exact int dot -> int32 -> float32, scale by the f32 inverse
-        step, round half-to-even, saturate."""
-        codes = np.round(d.astype(np.int32).astype(np.float32) * h.inv_step32)
-        return np.clip(codes, h.code_lo, h.code_hi).astype(np.float64)
+        """The SAR conversion, bit-for-bit the jnp/Pallas arithmetic —
+        the shared :func:`repro.core.cim.adc_convert` (exact int dot ->
+        int32 -> float32, scale by the f32 inverse step, round
+        half-to-even, saturate)."""
+        return adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
 
     def quant_stream(self, h, x):
         return self._quant(x, h)
@@ -404,25 +457,47 @@ class CIMEngine(PEEngine):
             d = p if d is None else d + p  # exact ints: order-free
         return self._adc(d, h)
 
+    def tiles_mac(self, h, patches):
+        """Batch-of-tiles MAC — the fused trace path's one call per
+        layer chunk.  ``patches``: (T, R, max kc) int-valued float64,
+        already quantized, zero-beyond-``h.kc[t]`` irrelevant (the
+        stacked weights are zero there).  One batched exact integer
+        gemm (f32/f64 BLAS is exact for these magnitudes — the stacked
+        weights' dtype encodes which), ONE vectorized ADC conversion
+        across all T subarrays, then the digital code sum — integers
+        exact in f64, so this equals the per-tile chain/group fold
+        bit-for-bit in any association order."""
+        d = np.matmul(patches, h.w_stack)            # (T, R, M) exact dots
+        codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        return codes.sum(axis=0)
+
     def finalize_conv(self, h, acc):
         return acc * h.deq
 
     def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
-        from repro.core.simulator import gemm_rows
-
         xq = x if quantized else self._quant(x, h)
         w = h.w[k0:k1, n0:n1]
         # the FC grid tile holds (k1 - k0) weight rows; when the spec's
         # subarray is smaller, the tile spans several subarrays — one
         # conversion each, codes accumulated digitally (matching the
-        # Pallas kernel's n_c-wide K steps bit-for-bit)
+        # Pallas kernel's n_c-wide K steps bit-for-bit).  All subarrays
+        # convert in ONE vectorized call: zero-padding K to a multiple
+        # of n_c adds nothing to the exact dots, and the f64 code sum
+        # is association-order-free (small integers)
         n_c = h.spec.n_c
-        codes = None
-        for s0 in range(0, k1 - k0, n_c):
-            d = gemm_rows(xq[:, s0:s0 + n_c], w[s0:s0 + n_c])
-            c = self._adc(d, h)
-            codes = c if codes is None else codes + c
-        return codes
+        kk = k1 - k0
+        pad = (-kk) % n_c
+        if pad:
+            xq = np.concatenate(
+                [xq, np.zeros((xq.shape[0], pad), xq.dtype)], axis=1)
+            w = np.concatenate(
+                [w, np.zeros((pad, w.shape[1]), w.dtype)], axis=0)
+        n_sub = (kk + pad) // n_c
+        xs = xq.reshape(-1, n_sub, n_c).transpose(1, 0, 2)
+        ws = w.reshape(n_sub, n_c, -1)
+        d = np.matmul(xs, ws)                # (n_sub, B, N) exact dots
+        codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        return codes.sum(axis=0)
 
     def finalize_fc(self, h, psum, n0, n1):
         return psum * h.deq[n0:n1]
@@ -462,6 +537,27 @@ class PallasEngine(CIMEngine):
         wq = h.tile_w8[t][:n].reshape(-1, h.c_out)
         return self._codes(xq, wq, h.spec)
 
+    def tiles_mac(self, h, patches):
+        """Batch-of-tiles MAC through ONE multi-tile ``emit_codes``
+        kernel invocation: each tile's ``kc`` activation columns land in
+        its own ``n_c``-wide K block (weights zero-padded past ``kc``),
+        so each kernel K grid step is exactly one chain tile's subarray
+        and the kernel's in-VMEM code accumulation IS the chain/group
+        digital fold — bitwise-identical to :meth:`CIMEngine.tiles_mac`."""
+        from repro.kernels.cim_matmul import cim_chain_codes_pallas
+
+        t, r, kcm = patches.shape
+        n_c = h.spec.n_c
+        if h.w8_sub is None:
+            sub = np.zeros((t, n_c, h.c_out), np.int8)
+            sub[:, :h.w8_stack.shape[1]] = h.w8_stack
+            h.w8_sub = sub.reshape(t * n_c, h.c_out)
+        x = np.zeros((r, t, n_c), np.int8)
+        x[:, :, :kcm] = patches.transpose(1, 0, 2)
+        codes = cim_chain_codes_pallas(x.reshape(r, t * n_c), h.w8_sub,
+                                       h.spec, interpret=self.interpret)
+        return np.asarray(codes, np.float64)
+
     def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
         xq = (x if quantized else self._quant(x, h)).astype(np.int8)
         return self._codes(xq, np.ascontiguousarray(h.w8[k0:k1, n0:n1]),
@@ -499,30 +595,46 @@ def make_engine(engine, cim_spec: Optional[CIMSpec] = None) -> PEEngine:
 #: cap on im2col rows fed to calibrate_gain (deterministic stride
 #: subsample — calibration reads magnitudes, not every pixel)
 _CALIB_ROWS = 4096
+#: cap on weight columns fed to calibrate_gain (per-column quantization
+#: makes a column subsample self-consistent)
+_CALIB_COLS = 512
 
 
 def _calibration_matrix(x: np.ndarray, w: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """(layer input, weight) -> (im2col'd activations, flat weight matrix)
-    in the same (C, K, K) feature order ``models/cnn.py`` uses."""
+    in the same (C, K, K) feature order ``models/cnn.py`` uses.
+
+    Pure numpy, and the row subsample happens *before* patch extraction
+    (the stride walks the same flattened (b, y, x) positions the old
+    full-tensor im2col kept), so calibration cost is bounded by
+    ``_CALIB_ROWS`` windows per layer instead of materializing the whole
+    k*k*C patch tensor — at ImageNet sizes that one change takes network
+    build from minutes to seconds."""
     if w.ndim == 2:
         cols = x.reshape(-1, x.shape[-1])
-        wmat = w
-    else:
-        from jax import lax
-
-        k, _, _, m = w.shape
-        # magnitudes, not geometry: unit stride + SAME padding samples
-        # densest and never yields an empty patch set (late layers can be
-        # smaller than their kernel)
-        patches = lax.conv_general_dilated_patches(
-            x, (k, k), (1, 1), padding="SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        cols = np.asarray(patches).reshape(-1, patches.shape[-1])
-        wmat = w.transpose(2, 0, 1, 3).reshape(-1, m)
-    if cols.shape[0] > _CALIB_ROWS:
-        cols = cols[::math.ceil(cols.shape[0] / _CALIB_ROWS)]
-    return cols, wmat
+        if cols.shape[0] > _CALIB_ROWS:
+            cols = cols[::math.ceil(cols.shape[0] / _CALIB_ROWS)]
+        return cols, w
+    k, _, c, m = w.shape
+    b, h, wd, _ = x.shape
+    total = b * h * wd
+    # magnitudes, not geometry: unit stride + SAME padding samples densest
+    # and never yields an empty patch set (late layers can be smaller than
+    # their kernel)
+    step = math.ceil(total / _CALIB_ROWS) if total > _CALIB_ROWS else 1
+    idx = np.arange(0, total, step)
+    bi, rest = np.divmod(idx, h * wd)
+    yi, xi = np.divmod(rest, wd)
+    lo = (k - 1) // 2
+    xp = np.zeros((b, h + k - 1, wd + k - 1, c), np.float32)
+    xp[:, lo:lo + h, lo:lo + wd] = x
+    dy, dx = np.meshgrid(np.arange(k), np.arange(k), indexing="ij")
+    # (rows, k, k, C) windows at the sampled centres
+    win = xp[bi[:, None, None], yi[:, None, None] + dy[None],
+             xi[:, None, None] + dx[None]]
+    cols = win.transpose(0, 3, 1, 2).reshape(len(idx), -1)  # (C, K, K) order
+    return cols, w.transpose(2, 0, 1, 3).reshape(-1, m)
 
 
 def calibrate_engine(engine: PEEngine, cnn, params: Dict[str, np.ndarray],

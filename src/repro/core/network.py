@@ -212,6 +212,14 @@ class NetworkSimulator:
         ADC-code-exact vs ``"cim"``), or a prebuilt ``PEEngine``
         instance.  ``cim_spec`` overrides the quantized engines' crossbar
         spec (adc_bits etc.) when ``engine`` is a name.
+
+        On ``backend="trace"`` the quantized engines run the fused
+        integer-native lowering (one batch-of-tiles gemm + one
+        vectorized ADC conversion per layer chunk — see
+        ``core/trace.py``), ADC-code-bitwise with the interpreter;
+        ``trace_jit=True`` selects their jitted flavor, which (unlike
+        the exact engine's float32 jit) is also bitwise and therefore
+        composes with ``streaming=True``.
         """
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
@@ -223,17 +231,14 @@ class NetworkSimulator:
             raise ValueError(
                 "streaming=True requires backend='trace' (the pipelined "
                 "executor advances compiled per-stage trace plans)")
-        if streaming and trace_jit:
-            raise ValueError(
-                "streaming=True is incompatible with trace_jit=True: the "
-                "float32 jitted path is allclose-only, which would break "
-                "run_stream's per-frame bitwise-vs-sequential guarantee")
         self.pe_engine: PEEngine = make_engine(engine, cim_spec)
-        if trace_jit and self.pe_engine.name != "exact":
+        if streaming and trace_jit and self.pe_engine.name == "exact":
             raise ValueError(
-                "trace_jit=True is the exact engine's float32 fast path; "
-                f"the {self.pe_engine.name!r} engine's quantized numerics "
-                "run the numpy trace (bitwise across backends)")
+                "streaming=True is incompatible with trace_jit=True on "
+                "the exact engine: its float32 jitted path is "
+                "allclose-only, which would break run_stream's per-frame "
+                "bitwise-vs-sequential guarantee (quantized engines' "
+                "integer jit flavor IS bitwise, so they may combine)")
         # residual wiring follows the configs/cnn.py naming convention the
         # jax reference uses (save at `*_a`, add at `residual_from`,
         # project through an immediately-following `*_sc`) — reject

@@ -25,6 +25,24 @@ batched gather/gemm ops, bitwise-equal to the interpreter:
   west psum, chain total + north group-sum), tail bias/activation/pool
   — numpy by default, ``jax.jit`` behind the ``use_jax`` flag.
 
+Quantized engines (``engine="cim"``/``"pallas"``) take a **fused
+integer-native lowering** of the same plan instead of the per-tile
+loop: all T tiles' gathers feed one zero-padded ``(T, rows, kc)`` patch
+tensor, the engine's batch-of-tiles MAC runs one batched exact integer
+gemm against the stacked resident weights, the per-subarray SAR ADC
+conversion vectorizes across *all* tiles of the layer at once (one
+:func:`repro.core.cim.adc_convert` call per chunk instead of one Python
+call per tile), and the chain/group segment fold collapses to a single
+code sum over the tile axis.  This is bitwise-equal to the per-tile
+fold *by construction*: ADC codes are small integers exact in float64,
+so association order cannot change a bit — ``fused=False`` keeps the
+per-tile reference path alive for the equality tests.  ``use_jax=True``
+on a quantized engine selects the jit flavor — int8 gathers +
+``lax.dot_general(..., preferred_element_type=int32)`` + the shared f32
+conversion — which, unlike the exact engine's float32 jit, is *also*
+bitwise (every op is exact-integer or the shared elementwise
+conversion), so it composes with streaming.
+
 Bitwise equality holds because every float op is replayed in the
 interpreter's association order: the per-pixel ``(B, C) @ (C, M)`` MACs
 become one ``(B*E*F, C) @ (C, M)`` gemm (same sequential k-reduction
@@ -152,7 +170,8 @@ class TraceExecutor:
                  counters: Optional[SimCounters] = None,
                  plan: Optional[TracePlan] = None,
                  use_jax: bool = False,
-                 engine=None, handle=None):
+                 engine=None, handle=None,
+                 fused: bool = True):
         from repro.core.engine import EXACT_ENGINE, conv_tile_slices
 
         k = sched.k
@@ -163,16 +182,19 @@ class TraceExecutor:
         self.handle = handle if handle is not None else \
             self.engine.conv_handle(sched.layer_name, weights,
                                     conv_tile_slices(sched))
-        if use_jax and self.engine.name != "exact":
-            raise ValueError(
-                "use_jax=True is the float32 im2col fast path of the exact "
-                f"engine only; the {self.engine.name!r} engine's quantized "
-                "numerics run the numpy trace")
         self.counters = counters if counters is not None else SimCounters()
         self.transport = transport if transport is not None \
             else _standalone_transport(sched.chain_len)
         self.plan = plan if plan is not None else compile_trace(sched)
         self.use_jax = use_jax
+        # quantized engines ride the fused batch-of-tiles lowering when
+        # they expose it; fused=False pins the per-tile reference fold
+        self.fused = fused and hasattr(self.engine, "tiles_mac")
+        if use_jax and self.engine.name != "exact" and not self.fused:
+            raise ValueError(
+                f"use_jax=True on the {self.engine.name!r} engine is the "
+                "fused integer jit flavor — it has no per-tile form "
+                "(fused=False)")
         # the engine handle owns the tap/channel-sliced weights; keep the
         # attribute for the jax path and external inspection
         self.weights: List[np.ndarray] = self.handle.tile_w
@@ -190,13 +212,18 @@ class TraceExecutor:
             ifm = ifm[None]
         b = ifm.shape[0]
         assert ifm.shape[1:] == (s.h, s.w, s.c_in), ifm.shape
-        if self.use_jax:
+        if self.use_jax and self.engine.name == "exact":
             out = self._run_jax(ifm)
         else:
             padded = np.zeros((b, s.hp, s.wp, s.c_in), np.float64)
             padded[:, s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
             stream = padded.reshape(b, -1, s.c_in)
-            out = self._execute_np(stream)
+            if not self.fused:
+                out = self._execute_np(stream)
+            elif self.use_jax:
+                out = self._run_jax_quant(stream)
+            else:
+                out = self._execute_quant(stream)
         self._account()
         return out[0] if squeeze else out
 
@@ -233,6 +260,119 @@ class TraceExecutor:
             gsum = acc if gsum is None else acc + gsum
         assert gsum is not None
         return self._tail_np(gsum.reshape(b, s.e, s.f, s.c_out))
+
+    #: fused-path working-set cap: f64 elements allowed in the largest
+    #: intermediate ((T, rows, kc) patches / (T, rows, M) dots) per chunk
+    _QCHUNK_ELEMS = 1 << 23
+
+    def _gather_tiles(self, qs: np.ndarray, lo: int, hi: int,
+                      buf: Optional[np.ndarray] = None) -> np.ndarray:
+        """Gather fires [lo, hi) of every tile into one zero-padded
+        (T, B*rows, max kc) patch tensor — the same per-tile gathers
+        ``_execute_np`` feeds ``tile_mac``, stacked.  Rows are b-major
+        (matching ``patch.reshape(b * ef, -1)``); columns are tap-major
+        then channel (matching the stacked weight slabs).  ``qs`` is the
+        int8 view of the quantized stream (8x less gather traffic); the
+        buffer carries the engine's exact-dot dtype (f32 when the
+        subarray full-scale fits f32's integer range)."""
+        s, plan = self.sched, self.plan
+        kcs = self.handle.kc
+        b, efc = qs.shape[0], hi - lo
+        if buf is None:
+            buf = np.zeros((len(plan.tiles), b * efc, max(kcs)),
+                           self.handle.w_stack.dtype)
+        for i, tt in enumerate(plan.tiles):
+            px = qs[:, tt.gather[:, lo:hi]]          # (B, pack, efc, C)
+            if tt.c_lo != 0 or tt.c_hi != s.c_in:
+                px = px[..., tt.c_lo:tt.c_hi]
+            buf[i, :, :kcs[i]] = \
+                px.transpose(0, 2, 1, 3).reshape(b * efc, kcs[i])
+        return buf
+
+    def _quant_chunks(self, ef: int, b: int):
+        """Fire-axis chunking for the fused path: bounds the patch / dot
+        working set.  Chunk boundaries cannot change a bit — conversion
+        is elementwise and every accumulation is an exact integer sum."""
+        t = len(self.plan.tiles)
+        kcs = self.handle.kc
+        width = max(1, t * b * max(max(kcs), self.sched.c_out))
+        chunk = max(1, min(ef, self._QCHUNK_ELEMS // width))
+        return [(lo, min(ef, lo + chunk)) for lo in range(0, ef, chunk)]
+
+    def _execute_quant(self, stream: np.ndarray) -> np.ndarray:
+        """The fused integer-native path: one stacked gather, one
+        batch-of-tiles engine MAC (batched exact integer gemm + ONE
+        vectorized ADC conversion across all T subarrays), and the
+        chain/group fold collapsed to a single code sum over tiles.
+        Bitwise-equal to ``_execute_np``'s per-tile fold: ADC codes are
+        integers exact in f64, so association order is free."""
+        s = self.sched
+        engine, handle = self.engine, self.handle
+        # quantized codes are int8-ranged by construction — the compact
+        # view moves 8x fewer bytes through the gathers
+        qs = engine.quant_stream(handle, stream).astype(np.int8)
+        b, ef, m = qs.shape[0], self.plan.fires, s.c_out
+        out = np.empty((b, ef, m), np.float64)
+        buf = None
+        for lo, hi in self._quant_chunks(ef, b):
+            if buf is None or buf.shape[1] != b * (hi - lo):
+                buf = None
+            buf = self._gather_tiles(qs, lo, hi, buf)
+            codes = engine.tiles_mac(handle, buf)    # (B*rows, M) code sums
+            out[:, lo:hi] = codes.reshape(b, hi - lo, m)
+        return self._tail_np(out.reshape(b, s.e, s.f, m))
+
+    # -- quantized jax fast path (bitwise, unlike the exact f32 one) ---------
+
+    def _run_jax_quant(self, stream: np.ndarray) -> np.ndarray:
+        """jit flavor of the fused path: int8 gathers + one batched
+        ``lax.dot_general(..., preferred_element_type=int32)`` + the
+        shared f32 ADC conversion + the exact integer code sum.  Every
+        op is exact-integer or the shared elementwise conversion, so
+        this path is *bitwise* equal to the numpy fused/per-tile paths
+        (codes are < 2^24, exact in f32)."""
+        s = self.sched
+        qs = self.engine.quant_stream(self.handle, stream)
+        if self._jax_fn is None:
+            self._jax_fn = self._build_jax_qfn()
+        csum = self._jax_fn(qs.astype(np.int8))
+        b = stream.shape[0]
+        out = np.asarray(csum, np.float64).reshape(b, s.e, s.f, s.c_out)
+        return self._tail_np(out)
+
+    def _build_jax_qfn(self):
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        s, plan = self.sched, self.plan
+        h = self.handle
+        ef = plan.fires
+        kcs, kcm = h.kc, max(h.kc)
+        w8 = np.zeros((len(plan.tiles), kcm, s.c_out), np.int8)
+        w8[:, :h.w8_stack.shape[1]] = h.w8_stack
+        inv = np.float32(h.inv_step32)
+        clo, chi = np.float32(h.code_lo), np.float32(h.code_hi)
+
+        def fn(stream, w8s):
+            b = stream.shape[0]
+            pats = []
+            for i, tt in enumerate(plan.tiles):
+                p = jnp.take(stream, tt.gather, axis=1)  # (B, pack, EF, C)
+                p = p[..., tt.c_lo:tt.c_hi].transpose(0, 2, 1, 3)
+                p = p.reshape(b, ef, kcs[i])
+                if kcs[i] < kcm:
+                    p = jnp.pad(p, ((0, 0), (0, 0), (0, kcm - kcs[i])))
+                pats.append(p)
+            x = jnp.stack(pats)                          # (T, B, EF, kc) i8
+            d = lax.dot_general(x, w8s, (((3,), (1,)), ((0,), (0,))),
+                                preferred_element_type=jnp.int32)
+            codes = jnp.clip(jnp.round(d.astype(jnp.float32) * inv),
+                             clo, chi)
+            return codes.sum(axis=0)                     # exact int sum
+
+        jitted = jax.jit(fn)
+        return lambda st: jitted(st, w8)
 
     def _tail_np(self, out: np.ndarray) -> np.ndarray:
         """Block-tail M-type program: dequantization (quantized engines),

@@ -106,10 +106,15 @@ class ModelReport:
 
 
 def validate_bitwise(cnn: CNNConfig, winner: Candidate,
-                     batch: int = 2, seed: int = 0) -> bool:
+                     batch: int = 2, seed: int = 0,
+                     engine: str = "exact") -> bool:
     """Run ``NetworkSimulator`` under the winner's placement and under
     the snake baseline of the *same plan* — outputs must be bitwise
-    equal (placement changes hops, never math)."""
+    equal (placement changes hops, never math).  ``engine`` selects the
+    PE numerics; quantized engines (``"cim"``/``"pallas"``) validate on
+    the fused integer-native trace lowering (``core/trace.py``) — the
+    compiled path DSE winners would actually serve on — whose ADC codes
+    are themselves bitwise-invariant under placement."""
     from repro.core.network import NetworkSimulator
 
     rng = np.random.default_rng(seed)
@@ -125,7 +130,8 @@ def validate_bitwise(cnn: CNNConfig, winner: Candidate,
                      ).astype(np.float64)
     cfg = winner.config
     kw = dict(reuse=cfg.reuse, dup_cap=cfg.dup_cap,
-              dup_overrides=dict(cfg.dup_overrides), backend="trace")
+              dup_overrides=dict(cfg.dup_overrides), backend="trace",
+              engine=engine)
     base = NetworkSimulator(cnn, params, **kw).run(x)
     opt = NetworkSimulator(cnn, params, placement=winner.placement,
                            **kw).run(x)
@@ -135,13 +141,18 @@ def validate_bitwise(cnn: CNNConfig, winner: Candidate,
 def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
             validate: str = "cifar10",
             space_factory: Optional[Callable[[CNNConfig], DesignSpace]]
-            = None, cim_spec=None) -> List[ModelReport]:
+            = None, cim_spec=None,
+            engine: str = "exact") -> List[ModelReport]:
     """Search each model's space and assemble reports.
 
     ``validate``: "none", "cifar10" (default: bitwise-check winners of
     simulable CIFAR-sized models only) or "all".  ``cim_spec`` (a
     ``CIMSpec``) scores candidates with the precision-aware quantized
     energy model, so the Pareto fronts report quantized TOPS/W.
+    ``engine`` selects the PE numerics winners are validated under;
+    quantized engines run the compiled integer-native trace path, so a
+    quantized DSE (``cim_spec`` + ``engine="cim"``) both scores and
+    validates the configuration it would actually serve.
     """
     reports = []
     for name in models:
@@ -155,7 +166,8 @@ def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
         validated: Optional[bool] = None
         if validate == "all" or (validate == "cifar10"
                                  and cnn.dataset == "cifar10"):
-            validated = validate_bitwise(cnn, winner, seed=seed)
+            validated = validate_bitwise(cnn, winner, seed=seed,
+                                         engine=engine)
         reports.append(ModelReport(model=name, result=result,
                                    winner=winner, validated=validated))
     return reports

@@ -9,6 +9,10 @@ placement) plus routed byte-hop / hotspot metrics from the shared
 the winner is *validated* afterwards by running ``NetworkSimulator``
 under the found placement and checking bitwise output equality with the
 snake baseline (``repro.dse.report`` / ``tests/test_dse.py``).
+Quantized searches (``cim_spec=``) pair with ``run_dse(engine="cim")``:
+validation then runs the fused integer-native trace lowering
+(``core/trace.py``) — the compiled path the winning mapping would serve
+on — whose ADC codes are placement-invariant by the same argument.
 """
 from __future__ import annotations
 

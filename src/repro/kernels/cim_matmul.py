@@ -118,5 +118,27 @@ def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
     return out[:m, :n]
 
 
+def cim_chain_codes_pallas(xq: jax.Array, wq: jax.Array,
+                           spec: CIMSpec = DEFAULT_SPEC,
+                           block_m: int = 256, block_n: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """Multi-tile ``emit_codes`` invocation: one kernel call for a whole
+    tile chain.
+
+    ``xq``: (R, T * n_c) int8 with each chain tile's ``kc <= n_c``
+    activation columns occupying its own ``n_c``-wide K block; ``wq``:
+    (T * n_c, M) int8 with each tile's weight slab zero-padded past its
+    ``kc`` rows (padding contributes nothing to the exact integer dot).
+    Each K grid step is then exactly one chain tile's subarray, so the
+    kernel's in-VMEM code accumulation *is* the chain/group digital fold
+    the Rofm performs "on the move" — the returned (R, M) f32 code sums
+    are bitwise the per-tile engine fold.
+    """
+    assert xq.shape[1] == wq.shape[0] and xq.shape[1] % spec.n_c == 0, (
+        xq.shape, wq.shape, spec.n_c)
+    return cim_matmul_pallas(xq, wq, spec, block_m=block_m, block_n=block_n,
+                             interpret=interpret, emit_codes=True)
+
+
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult

@@ -290,7 +290,13 @@ def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
     resident, never dequantized — while float params run the exact
     engine.  Pass ``engine=`` to override (e.g. ``"pallas"``), or
     dequantize explicitly with :func:`dequantize_params` to serve a
-    quantized checkpoint on the exact engine."""
+    quantized checkpoint on the exact engine.
+
+    Because this builds on ``backend="trace"``, quantized serving gets
+    the fused integer-native lowering (``core/trace.py``) automatically:
+    batched int8 gemms + one vectorized ADC conversion per layer,
+    bitwise-equal to the per-tile interpreter fold and composing with
+    the streaming executor's per-stage runs."""
     from repro.core.network import NetworkSimulator
 
     if engine is None:

@@ -381,17 +381,37 @@ def test_network_engine_flag_validation():
     rng = np.random.default_rng(1)
     cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
     params = _int_params(cnn, rng)
-    with pytest.raises(ValueError):  # jit is the exact engine's fast path
+    with pytest.raises(ValueError):  # exact f32 jit is allclose-only
         NetworkSimulator(cnn, params, backend="trace", trace_jit=True,
-                         engine="cim")
+                         streaming=True)
     with pytest.raises(ValueError):  # calib images are a quantized knob
         NetworkSimulator(cnn, params, calib_images=np.zeros((1, 32, 32, 3)))
     with pytest.raises(ValueError):
         NetworkSimulator(cnn, params, engine="bogus")
-    with pytest.raises(ValueError):  # trace_jit + cim via TraceExecutor too
+    with pytest.raises(ValueError):  # quantized jit has no per-tile form
         sched, wts, ifm = _block(3)
-        TraceExecutor(sched, wts, use_jax=True,
+        TraceExecutor(sched, wts, use_jax=True, fused=False,
                       engine=_cal(CIMEngine(LOSSY), sched.layer_name, ifm))
+
+
+def test_network_quantized_trace_jit_is_bitwise():
+    """trace_jit on a quantized engine is the fused integer jit flavor —
+    bitwise with the numpy trace (unlike the exact engine's f32 jit),
+    and therefore allowed to combine with streaming."""
+    rng = np.random.default_rng(6)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {k: v * 0.1 for k, v in _int_params(cnn, rng).items()}
+    frames = rng.random((3, 32, 32, 3))
+    # one pre-shared engine instance: calibration runs once, all three
+    # simulators run identical per-layer scales/gains
+    kw = dict(backend="trace", engine=CIMEngine(LOSSY),
+              calib_images=frames[:1])
+    base = NetworkSimulator(cnn, params, **kw).run(frames)
+    jit = NetworkSimulator(cnn, params, trace_jit=True, **kw).run(frames)
+    stream_jit = NetworkSimulator(cnn, params, trace_jit=True,
+                                  streaming=True, **kw).run(frames)
+    assert jit.logits.tobytes() == base.logits.tobytes()
+    assert stream_jit.logits.tobytes() == base.logits.tobytes()
 
 
 # ---------------------------------------------------------------------------

@@ -170,3 +170,37 @@ def test_adc_codes_bounded(seed, gain):
     n_sub = 512 // 128
     bound = n_sub * (spec.q_max + 1) * spec.adc_step
     assert np.all(np.abs(out) <= bound + 1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(5, 9),
+    w=st.integers(5, 9),
+    c=st.integers(1, 9),
+    m=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    n_c=st.sampled_from([32, 64, 96]),
+    gain=st.floats(2.0, 64.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_trace_codes_bitwise_property(h, w, c, m, k, n_c, gain, seed):
+    """Property (the fused-lowering satellite): for *any* conv geometry
+    and subarray width the batch-of-tiles trace lowering reproduces the
+    per-tile interpreter fold's ADC codes bit-for-bit — the codes are
+    small integers exact in f64, so the fused association order cannot
+    change a single bit."""
+    from repro.core.engine import CIMEngine
+    from repro.core.trace import TraceExecutor
+
+    spec = CIMSpec(n_c=n_c, adc_bits=8, gain=gain)
+    rng = np.random.default_rng(seed)
+    ifm = rng.standard_normal((1, h, w, c))
+    wts = rng.standard_normal((k, k, c, m))
+    sched = compile_conv_block("prop", h, w, c, m, k, 1, k // 2)
+    eng = CIMEngine(spec).set_layer(
+        sched.layer_name, a_scale=float(np.abs(ifm).max()) / 127)
+    interp = BlockSimulator(sched, wts, engine=eng).run(ifm)
+    fused = TraceExecutor(sched, wts, engine=eng).run(ifm)
+    pertile = TraceExecutor(sched, wts, engine=eng, fused=False).run(ifm)
+    assert interp.tobytes() == fused.tobytes()
+    assert interp.tobytes() == pertile.tobytes()

@@ -1,0 +1,129 @@
+"""The fused integer-native quantized trace path (``core/trace.py``):
+the batch-of-tiles lowering must reproduce the per-tile interpreter
+fold's ADC codes bit-for-bit on ragged geometries — K % n_c != 0,
+C > N_c split chains, FC grids whose tile spans several spec subarrays,
+B == 1 — for both quantized engines and for the jit flavor, and the
+vectorized conversion must equal per-tile conversion code-for-code."""
+import numpy as np
+import pytest
+from conftest import int_params as _int_params
+
+from repro.configs.cnn import CNN_BENCHMARKS
+from repro.core.cim import CIMSpec, adc_convert
+from repro.core.engine import CIMEngine, PallasEngine, conv_tile_slices
+from repro.core.network import NetworkSimulator
+from repro.core.schedule import compile_conv_block
+from repro.core.simulator import BlockSimulator, simulate_fc
+from repro.core.trace import TraceExecutor
+
+LOSSY = CIMSpec(n_c=256, adc_bits=8, gain=64.0)
+#: small subarray so conv tiles are K-ragged (kc < n_c) *and* FC grid
+#: tiles span several spec subarrays (grid n_c 256 > spec n_c)
+NARROW = CIMSpec(n_c=64, adc_bits=8, gain=48.0)
+
+ENGINES = {"cim": CIMEngine, "pallas": PallasEngine}
+
+#: ragged conv geometries: K % n_c != 0 (every tile's pack*Cs < n_c),
+#: C > N_c split chains (c_splits), odd widths, stride, 1x1, pooling
+GEOMS = [
+    dict(h=8, w=9, c=5, m=6, k=3, stride=1, pad=1),
+    dict(h=8, w=8, c=9, m=6, k=3, stride=1, pad=1, c_splits=3),
+    dict(h=9, w=7, c=4, m=5, k=3, stride=2, pad=1),
+    dict(h=6, w=6, c=7, m=4, k=1, stride=1, pad=0),
+    dict(h=8, w=8, c=4, m=6, k=3, stride=1, pad=1, pool_k=2, pool_s=2),
+]
+
+
+def _block(seed, spec, engine_cls, batch, **kw):
+    r = np.random.default_rng(seed)
+    ifm = r.standard_normal((batch, kw["h"], kw["w"], kw["c"]))
+    wts = r.standard_normal((kw["k"], kw["k"], kw["c"], kw["m"]))
+    sched = compile_conv_block(
+        f"rag{seed}", kw["h"], kw["w"], kw["c"], kw["m"], kw["k"],
+        kw["stride"], kw["pad"],
+        **{k: v for k, v in kw.items()
+           if k in ("c_splits", "pool_k", "pool_s")})
+    eng = engine_cls(spec).set_layer(
+        sched.layer_name, a_scale=float(np.abs(ifm).max()) / 127)
+    return sched, wts, ifm, eng
+
+
+@pytest.mark.parametrize("engine", list(ENGINES))
+@pytest.mark.parametrize("gi", range(len(GEOMS)))
+@pytest.mark.parametrize("batch", [1, 2])
+def test_fused_equals_pertile_equals_interp(engine, gi, batch):
+    """interp == fused trace == per-tile trace == jit flavor, bitwise,
+    on every ragged geometry, including unbatched B == 1 runs."""
+    sched, wts, ifm, eng = _block(
+        10 + gi, NARROW, ENGINES[engine], batch, **GEOMS[gi])
+    interp = BlockSimulator(sched, wts, engine=eng).run(ifm)
+    fused = TraceExecutor(sched, wts, engine=eng).run(ifm)
+    pertile = TraceExecutor(sched, wts, engine=eng, fused=False).run(ifm)
+    jit = TraceExecutor(sched, wts, engine=eng, use_jax=True).run(ifm)
+    assert interp.tobytes() == fused.tobytes()
+    assert interp.tobytes() == pertile.tobytes()
+    assert interp.tobytes() == jit.tobytes()
+
+
+@pytest.mark.parametrize("engine", list(ENGINES))
+def test_batched_conversion_equals_pertile_conversion(engine):
+    """The one-shot (tiles, rows, pixels) conversion is code-for-code
+    the per-tile conversion: tiles_mac == the tile_mac chain fold."""
+    sched, wts, ifm, eng = _block(3, NARROW, ENGINES[engine], 2, **GEOMS[0])
+    h = eng.conv_handle(sched.layer_name, wts, conv_tile_slices(sched))
+    rng = np.random.default_rng(0)
+    t, kcm = len(h.kc), max(h.kc)
+    patches = np.zeros((t, 6, kcm))
+    for i, kc in enumerate(h.kc):
+        patches[i, :, :kc] = rng.integers(-128, 128, (6, kc))
+    fused = eng.tiles_mac(h, patches)
+    ref = np.zeros_like(fused)
+    for i, kc in enumerate(h.kc):  # per-tile dots + per-tile conversions
+        d = patches[i, :, :kc] @ h.tile_w[i].reshape(kc, -1)
+        ref += adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+    assert fused.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize("engine", list(ENGINES))
+@pytest.mark.parametrize("batch", [1, 3])
+def test_fc_grid_spanning_subarrays_bitwise(engine, batch):
+    """FC grid n_c (256) > spec n_c (64): each grid tile spans four
+    spec subarrays — the vectorized multi-subarray conversion must
+    match an explicit per-subarray reference loop bit-for-bit."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((batch, 200))   # K % n_c != 0 tail tile too
+    w = rng.standard_normal((200, 30))
+    eng = ENGINES[engine](NARROW).set_layer(
+        "fc", a_scale=float(np.abs(x).max()) / 127)
+    got = simulate_fc(x, w, 256, 256, engine=eng)
+
+    h = eng.fc_handle("fc", w)
+    xq = np.clip(np.round(x / h.a_scale), -128, 127)
+    codes = np.zeros((batch, 30))
+    for s0 in range(0, 200, NARROW.n_c):    # reference: one ADC per chunk
+        d = xq[:, s0:s0 + NARROW.n_c] @ h.w[s0:s0 + NARROW.n_c]
+        codes += adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+    ref = codes * h.deq
+    assert got.tobytes() == ref.tobytes()
+
+
+@pytest.mark.parametrize("engine", list(ENGINES))
+def test_network_ragged_interp_trace_stream_bitwise(engine):
+    """Whole-network interp == trace == streaming == trace_jit on
+    vgg11, where every conv tile is K-ragged (pack * Cs < n_c) and the
+    512-channel layers split chains (C > N_c)."""
+    rng = np.random.default_rng(9)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {k: v * 0.1 for k, v in _int_params(cnn, rng).items()}
+    frames = rng.random((2, 32, 32, 3))
+    eng = ENGINES[engine](LOSSY)  # shared: calibrate once, compare runs
+    kw = dict(engine=eng, calib_images=frames[:1])
+    interp = NetworkSimulator(cnn, params, backend="interp", **kw).run(frames)
+    trace = NetworkSimulator(cnn, params, backend="trace", **kw).run(frames)
+    stream = NetworkSimulator(cnn, params, backend="trace", streaming=True,
+                              **kw).run(frames)
+    jit = NetworkSimulator(cnn, params, backend="trace", trace_jit=True,
+                           **kw).run(frames)
+    assert interp.logits.tobytes() == trace.logits.tobytes()
+    assert interp.logits.tobytes() == stream.logits.tobytes()
+    assert interp.logits.tobytes() == jit.logits.tobytes()
