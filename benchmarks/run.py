@@ -15,6 +15,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
   ``cim_<model>_trace`` rows timing the fused integer-native quantized
   trace path against the exact trace on every model (the embedded
   ``ratio_vs_exact`` is gated at 2x by ``--check-regress``)
+* ``robust_*`` — Monte-Carlo device-variation sweeps per model (>= 20
+  seeded trials of the ``VARIATION_PRESETS`` corners on the compiled
+  quantized trace path): top-1 agreement statistics and the
+  zero-variation bitwise check.  Accuracy rows, not wall time —
+  ``--check-regress`` never speed-gates them (it only fails on a
+  committed ``False`` match field, exactly like ``cim_*``)
 * ``roofline_*`` — summary of the dry-run roofline table if present
   (skipped with a note when ``results/dryrun.json`` is absent — a
   placeholder row is never written)
@@ -578,6 +584,107 @@ def cim_smoke(seed: int = 0) -> int:
     return 0 if ok else 1
 
 
+#: Monte-Carlo trials per robust_* row (the acceptance floor is 20)
+ROBUST_TRIALS = 20
+
+
+def _robust_derived(rep) -> str:
+    z = rep.zero_var_bitwise
+    return (f"trials={rep.trials} nominal_top1={rep.nominal_agree:.3f} "
+            f"noisy_top1_mean={rep.agree_float.mean:.3f} "
+            f"std={rep.agree_float.std:.3f} "
+            f"worst={rep.agree_float.worst:.3f} "
+            f"vs_nominal_mean={rep.agree.mean:.3f} "
+            f"zero_var_bitwise={'n/a' if z is None else z}")
+
+
+def bench_robust():
+    """Monte-Carlo robustness rows (``robust_*``): every model swept for
+    ``ROBUST_TRIALS`` seeded draws of each device-variation corner —
+    conductance noise, stuck-at cells, and ADC offset/gain error in
+    isolation, then the combined "all" corner — on the compiled
+    quantized trace path.  One simulator build per model (amortized
+    across all four presets); only engine handles rebuild per trial.
+    The first sweep per model also checks the zero-magnitude variation
+    run is bitwise-equal to the nominal engine.  These are accuracy
+    rows (see the module docstring): ``--check-regress`` ignores their
+    wall time."""
+    import jax
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.models.cnn import init_cnn
+    from repro.runtime.robustness import sweep_presets
+
+    rows = []
+    for name in CNN_BENCHMARKS:
+        rng = np.random.default_rng(0)
+        cnn = CNN_BENCHMARKS[name]()
+        params = {k: np.asarray(v, np.float64)
+                  for k, v in init_cnn(jax.random.PRNGKey(0), cnn).items()}
+        hw = cnn.input_hw
+        b = 4 if cnn.dataset == "cifar10" else 1
+        images = rng.random((b, hw, hw, 3))
+        t0 = time.perf_counter()
+        reps = sweep_presets(cnn, params, images, trials=ROBUST_TRIALS)
+        us = (time.perf_counter() - t0) * 1e6
+        for preset, rep in reps.items():
+            rows.append((f"robust_{name}_{preset}",
+                         us if preset == "all" else 0.0,
+                         _robust_derived(rep)))
+    return rows
+
+
+#: committed reference for ``--fault-smoke``: the seeded 2-trial
+#: "all"-corner vgg11 sweep must reproduce these numbers exactly
+#: (rounded to 6 places) — any drift means the seeded variation draw or
+#: the quantized trace path it perturbs changed behavior
+FAULT_SMOKE_REF = {
+    "nominal_agree": 0.75,
+    "agree": [0.0, 0.25],
+}
+
+
+def fault_smoke(seed: int = 0) -> int:
+    """Bounded robustness smoke (``--fault-smoke``): 2 seeded trials of
+    the "all" device-variation corner on vgg11's compiled quantized
+    trace path (batch 4, fixed seed).  Non-zero exit if (1) the
+    zero-magnitude variation run is not bitwise-equal to the nominal
+    engine, or (2) the seeded trial accuracies drift from the committed
+    ``FAULT_SMOKE_REF``."""
+    import jax
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.variation import VARIATION_PRESETS
+    from repro.models.cnn import init_cnn
+    from repro.runtime.robustness import monte_carlo_sweep
+
+    rng = np.random.default_rng(seed)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {k: np.asarray(v, np.float64)
+              for k, v in init_cnn(jax.random.PRNGKey(seed), cnn).items()}
+    images = rng.random((4, 32, 32, 3))
+    rep = monte_carlo_sweep(cnn, params, images, VARIATION_PRESETS["all"],
+                            trials=2, seed0=seed)
+    ok = True
+    if rep.zero_var_bitwise is not True:
+        print("fault-smoke: zero-magnitude variation diverged bitwise "
+              "from the nominal engine")
+        ok = False
+    got = {"nominal_agree": round(rep.nominal_agree, 6),
+           "agree": [round(a, 6) for a in rep.per_trial]}
+    if got != FAULT_SMOKE_REF:
+        print("fault-smoke: seeded sweep drifted from the committed "
+              f"reference\n  expected {FAULT_SMOKE_REF}\n  got      {got}")
+        ok = False
+    print(f"fault-smoke: {'ok' if ok else 'FAIL'} — 2 seeded trials, "
+          f"zero_var_bitwise={rep.zero_var_bitwise}, "
+          f"nominal_top1={rep.nominal_agree:.3f}, "
+          f"noisy_vs_nominal={rep.agree.mean:.3f}")
+    return 0 if ok else 1
+
+
 def bench_dse(budget: int = 64):  # > default space size: exhaustive sweep
     """Design-space exploration winners (``--dse``): per model, the best
     placement found at the baseline plan vs the snake baseline — CIFAR
@@ -649,14 +756,17 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     fails on them — and non-gated baseline rows (``dse_*`` search
     results, ``stream_*`` streaming rows — fill/drain-dominated at the
     bench's bounded frame counts, so their wall time is not a steady-
-    state signal — ``cim_*`` quantized-accuracy rows, and
-    ``tab4_*``/``fig*`` model rows) are never speed-gated.  ``cim_*``
-    rows are instead checked for *equality of match*, not speed: each
-    row carries its own bitwise/agreement result, and this gate fails
-    if any committed ``cim_*`` row carries a ``False`` match field
-    (the live engines themselves are gated by ``--cim-smoke``); their
-    wall time includes one-off calibration and jit warmup, so a speed
-    ratio on them would gate noise, not code.  ``cim_*_trace`` rows are
+    state signal — ``cim_*`` quantized-accuracy rows, ``robust_*``
+    Monte-Carlo variation rows, and ``tab4_*``/``fig*`` model rows) are
+    never speed-gated.  ``cim_*`` and ``robust_*`` rows are instead
+    checked for *equality of match*, not speed: each row carries its own
+    bitwise/agreement result — for ``robust_*`` the zero-variation
+    bitwise field — and this gate fails if any committed row of either
+    family carries a ``False`` match field (the live paths themselves
+    are gated by ``--cim-smoke`` / ``--fault-smoke``); their wall time
+    includes one-off calibration, Monte-Carlo trial counts and jit
+    warmup, so a speed ratio on them would gate noise, not code.
+    ``cim_*_trace`` rows are
     the exception: each embeds its own self-normalized
     ``ratio_vs_exact`` (both paths timed on the same frames in the same
     pass), and the gate fails if any model's committed ratio exceeds
@@ -675,10 +785,11 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     # quantized-engine result (bitwise=False / a broken agreement field)
     # must not sit silently in the committed baseline
     bad_match = [r["name"] for r in brows
-                 if r["name"].startswith("cim_") and "False" in r["derived"]]
+                 if r["name"].startswith(("cim_", "robust_"))
+                 and "False" in r["derived"]]
     if bad_match:
-        print("check-regress: FAIL — committed cim_* rows carry a False "
-              f"match field: {', '.join(bad_match)}")
+        print("check-regress: FAIL — committed cim_*/robust_* rows carry "
+              f"a False match field: {', '.join(bad_match)}")
         return 1
     # cim_*_trace ratio gate: the committed quantized-vs-exact trace
     # ratio (self-normalized — both paths timed on the same frames in
@@ -768,6 +879,12 @@ def main(argv=None) -> None:
                          "backends plus 2 fixed-seed vgg11 frames under "
                          "engine='cim'; fails on any ADC-code mismatch "
                          "between engines or executors")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="bounded device-variation smoke for CI: a seeded "
+                         "2-trial vgg11 Monte-Carlo sweep; fails if the "
+                         "zero-variation path diverges bitwise from the "
+                         "nominal engine or the seeded trial accuracies "
+                         "drift from the committed reference")
     args = ap.parse_args(argv)
 
     if args.check_regress:
@@ -776,6 +893,8 @@ def main(argv=None) -> None:
         raise SystemExit(stream_smoke())
     if args.cim_smoke:
         raise SystemExit(cim_smoke())
+    if args.fault_smoke:
+        raise SystemExit(fault_smoke())
 
     rows = []
     print("name,us_per_call,derived")
@@ -783,7 +902,7 @@ def main(argv=None) -> None:
                bench_kernels, bench_simulator, bench_sim_batched,
                bench_network_sim, bench_network_sim_resnet,
                bench_network_stream, bench_cim, bench_cim_trace,
-               bench_roofline_summary]
+               bench_robust, bench_roofline_summary]
     if args.dse:
         benches.append(bench_dse)
     for fn in benches:

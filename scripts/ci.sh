@@ -26,3 +26,9 @@ python -m repro.dse --smoke --seed 0
 # exits non-zero on any code mismatch between engines/lowerings or a
 # quantized/exact wall-time ratio above 2x
 python -m benchmarks.run --cim-smoke
+# bounded device-variation smoke: seeded 2-trial vgg11 Monte-Carlo sweep
+# of the "all" corner on the compiled quantized trace path; exits
+# non-zero if the zero-variation run diverges bitwise from the nominal
+# engine or the seeded trial accuracies drift from the committed
+# FAULT_SMOKE_REF reference
+python -m benchmarks.run --fault-smoke

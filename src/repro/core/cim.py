@@ -140,20 +140,29 @@ def adc_dequantize(codes: jax.Array, spec: CIMSpec) -> jax.Array:
     return codes.astype(jnp.float32) * spec.adc_step
 
 
-def adc_convert(d: np.ndarray, inv_step32: np.float32,
-                code_lo: float, code_hi: float) -> np.ndarray:
+def adc_convert(d: np.ndarray, inv_step32, code_lo: float, code_hi: float,
+                offset=None) -> np.ndarray:
     """The SAR conversion on exact integer dots, **shared verbatim** by
     every executor flavor (per-tile numpy, the fused batch-of-tiles trace
     path, the FC grid) and bit-for-bit the jnp / Pallas-kernel arithmetic:
     int32 -> float32, scale by the float32 inverse step, round
     half-to-even, saturate.  Vectorized over any leading shape — one call
-    converts all subarrays of a layer at once.  Output is integer ADC
-    codes exact in float64, so downstream accumulation order is free.
+    converts all subarrays of a layer at once.  Output is ADC codes exact
+    in float64, so downstream accumulation order is free.
+
+    ``inv_step32`` may be a scalar or a float32 array broadcastable
+    against ``d`` (per-subarray gain error under a
+    :class:`~repro.core.variation.VariationModel`); ``offset`` (same
+    broadcast rules, in code LSBs, added before rounding) models the
+    per-subarray SAR comparator offset.  ``offset=None`` leaves the
+    arithmetic byte-identical to the nominal two-op conversion.
     """
     d = np.asarray(d)
-    codes = np.round(d.astype(np.int32).astype(np.float32)
-                     * np.float32(inv_step32))
-    return np.clip(codes, code_lo, code_hi).astype(np.float64)
+    acc = (d.astype(np.int32).astype(np.float32)
+           * np.asarray(inv_step32, np.float32))
+    if offset is not None:
+        acc = acc + np.asarray(offset, np.float32)
+    return np.clip(np.round(acc), code_lo, code_hi).astype(np.float64)
 
 
 def calibrate_gain(x, w, spec: CIMSpec, percentile: float = 100.0) -> float:

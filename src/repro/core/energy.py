@@ -177,7 +177,8 @@ def analyze(cnn: CNNConfig, n_c: int = 256, n_m: int = 256, reuse: int = 1,
 
 def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
                  placement: "Placement | None" = None,
-                 cim_spec: "CIMSpec | None" = None) -> EnergyReport:
+                 cim_spec: "CIMSpec | None" = None,
+                 layer_specs: "dict | None" = None) -> EnergyReport:
     """Energy/throughput report for one planned mapping.
 
     ``placement`` injects the tile layout to account routed traffic on
@@ -190,6 +191,11 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
     the precision-aware component model: analog array + DAC input terms
     scaling with ``a_bits``, and per-conversion SAR ADC energy scaling
     with ``adc_bits`` over the *actual* subarray conversion count.
+
+    ``layer_specs`` (``{layer name: CIMSpec}``, requires ``cim_spec``)
+    scores per-layer bit-scalable precision: each layer's MACs and
+    conversions are charged at its own ``(a_bits, adc_bits)`` — the
+    TOPS/W-at-precision axis of the robustness DSE.
     """
     rep = EnergyReport(
         model=cnn.name,
@@ -198,13 +204,25 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
         ii_cycles=plan.initiation_interval,
     )
     if cim_spec is None:
+        if layer_specs:
+            raise ValueError("layer_specs requires cim_spec")
         rep.e_cim = plan.total_macs * E_MAC
-    else:
+    elif not layer_specs:
         conv = adc_conversions(plan)
         rep.n_adc_conversions = conv
         rep.e_cim_array = plan.total_macs * E_ARRAY_BIT * cim_spec.a_bits
         rep.e_cim_input = plan.total_macs * E_DAC_BIT * cim_spec.a_bits
         rep.e_cim_adc = conv * adc_conversion_energy(cim_spec.adc_bits)
+        rep.e_cim = rep.e_cim_array + rep.e_cim_input + rep.e_cim_adc
+    else:
+        for lp in plan.layers:
+            sp = layer_specs.get(lp.name, cim_spec)
+            lconv = (lp.out_pixels * lp.chain_len * lp.c_out
+                     if lp.kind == "conv" else lp.chain_len * lp.c_out)
+            rep.n_adc_conversions += lconv
+            rep.e_cim_array += lp.macs * E_ARRAY_BIT * sp.a_bits
+            rep.e_cim_input += lp.macs * E_DAC_BIT * sp.a_bits
+            rep.e_cim_adc += lconv * adc_conversion_energy(sp.adc_bits)
         rep.e_cim = rep.e_cim_array + rep.e_cim_input + rep.e_cim_adc
     if placement is None:
         placement = place_network(plan)

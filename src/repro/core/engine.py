@@ -53,6 +53,7 @@ from repro.core.cim import (
     calibrate_gain,
     quantize_symmetric,
 )
+from repro.core.variation import VariationModel
 
 #: engine registry keys accepted by ``make_engine`` / ``NetworkSimulator``
 ENGINES = ("exact", "cim", "pallas")
@@ -66,17 +67,23 @@ ENGINES = ("exact", "cim", "pallas")
 # ---------------------------------------------------------------------------
 
 
-def quantize_weight(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def quantize_weight(w: np.ndarray, bits: int = 8
+                    ) -> Tuple[np.ndarray, np.ndarray]:
     """(K, K, C, M) or (C_in, C_out) float -> (q int8 same shape, s (M,)).
 
     Pure numpy, elementwise-identical to ``quantize_symmetric`` in f32
     (max / divide / round-half-even / clip are the same IEEE ops) — VGG's
     100M-element FC matrices quantize in milliseconds at network build
-    instead of round-tripping through a per-shape jit."""
+    instead of round-tripping through a per-shape jit.  ``bits`` scales
+    the signed integer grid (``<= 8``; codes stay int8-resident — the
+    bit-scalable precision lever of the per-layer DSE axis)."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"w_bits must be in [2, 8] (int8 storage): {bits}")
+    q_max = 2 ** (bits - 1) - 1
     w32 = np.asarray(w, np.float32).reshape(-1, np.asarray(w).shape[-1])
     amax = np.max(np.abs(w32), axis=0, keepdims=True)
-    s = np.maximum(amax, np.float32(1e-8)) / np.float32(127)
-    q = np.clip(np.round(w32 / s), -128, 127).astype(np.int8)
+    s = np.maximum(amax, np.float32(1e-8)) / np.float32(q_max)
+    q = np.clip(np.round(w32 / s), -q_max - 1, q_max).astype(np.int8)
     return (q.reshape(np.shape(w)),
             np.asarray(s, np.float64).reshape(np.shape(w)[-1]))
 
@@ -142,6 +149,11 @@ class ConvHandle:
     w_stack: Optional[np.ndarray] = None      # (T, max kc, M) float64
     w8_stack: Optional[np.ndarray] = None     # (T, max kc, M) int8
     w8_sub: Optional[np.ndarray] = None       # (T * n_c, M) int8 (Pallas)
+    # per-subarray ADC variation (None = nominal scalar conversion):
+    # float32 (T,) inverse step with gain error folded in, and the
+    # comparator offset in code LSBs (see core/variation.py)
+    adc_inv: Optional[np.ndarray] = None
+    adc_off: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -158,6 +170,11 @@ class FCHandle:
     code_lo: float = 0.0
     code_hi: float = 0.0
     spec: Optional[CIMSpec] = None
+    # per-subarray ADC variation over the FC grid, indexed by the global
+    # subarray id ``k0 // n_c + i`` (grid tiles that straddle the same
+    # n_c boundary share the same physical column ADC)
+    adc_inv: Optional[np.ndarray] = None
+    adc_off: Optional[np.ndarray] = None
 
 
 @dataclass(frozen=True)
@@ -315,7 +332,8 @@ class CIMEngine(PEEngine):
 
     def __init__(self, spec: CIMSpec = DEFAULT_SPEC,
                  use_calibrated_gain: bool = True,
-                 clip_percentile: Optional[float] = None):
+                 clip_percentile: Optional[float] = None,
+                 variation: Optional[VariationModel] = None):
         self.spec = spec
         self.use_calibrated_gain = use_calibrated_gain
         self.clip_percentile = (self.CLIP_PERCENTILE if clip_percentile
@@ -324,6 +342,17 @@ class CIMEngine(PEEngine):
             raise ValueError(
                 f"clip_percentile must be in (0, 100]: {clip_percentile}")
         self.calib: Dict[str, LayerCalib] = {}
+        #: per-layer bit-scalable spec overrides (kept OUT of ``calib``
+        #: so ``calibrate_engine``'s already-calibrated skip still works)
+        self.layer_specs: Dict[str, CIMSpec] = {}
+        #: per-layer activation-clip percentile overrides (satellite of
+        #: the precision search: the global 99.9 is wrong for layers
+        #: whose activation tails carry signal)
+        self.clip_overrides: Dict[str, float] = {}
+        #: device-variation model injected into every handle built after
+        #: it is set (``None`` = ideal arithmetic; swap via
+        #: ``NetworkSimulator.set_variation`` for Monte-Carlo trials)
+        self.variation = variation
 
     # -- calibration ---------------------------------------------------------
 
@@ -331,6 +360,38 @@ class CIMEngine(PEEngine):
                   gain: Optional[float] = None) -> "CIMEngine":
         self.calib[name] = LayerCalib(a_scale=a_scale, gain=gain)
         return self
+
+    def set_layer_spec(self, name: str, *, w_bits: Optional[int] = None,
+                       a_bits: Optional[int] = None,
+                       adc_bits: Optional[int] = None,
+                       clip_percentile: Optional[float] = None
+                       ) -> "CIMEngine":
+        """Per-layer bit-scalable precision / calibration override.
+
+        Replaces the named layer's ``(w_bits, a_bits, adc_bits)`` on top
+        of the engine-wide spec (geometry — ``n_c``/``n_m``/``gain`` —
+        stays shared) and optionally its activation-clip percentile.
+        Must be set before handles are built / calibration runs."""
+        base = self.layer_specs.get(name, self.spec)
+        kw = {}
+        if w_bits is not None:
+            kw["w_bits"] = int(w_bits)
+        if a_bits is not None:
+            kw["a_bits"] = int(a_bits)
+        if adc_bits is not None:
+            kw["adc_bits"] = int(adc_bits)
+        if kw:
+            self.layer_specs[name] = replace(base, **kw)
+        if clip_percentile is not None:
+            cp = float(clip_percentile)
+            if not 0.0 < cp <= 100.0:
+                raise ValueError(
+                    f"clip_percentile must be in (0, 100]: {cp}")
+            self.clip_overrides[name] = cp
+        return self
+
+    def _base_spec(self, name: str) -> CIMSpec:
+        return self.layer_specs.get(name, self.spec)
 
     def calibrate_layer(self, name, x, w):
         """Derive (a_scale, gain) from one layer's captured float input.
@@ -342,13 +403,14 @@ class CIMEngine(PEEngine):
         the paper's integration-gain calibration over the layer's
         im2col'd contraction (conv kernels are flattened the same way
         ``models/cnn.py`` feeds the CIM reference)."""
-        spec = self.spec
+        spec = self._base_spec(name)
+        clip = self.clip_overrides.get(name, self.clip_percentile)
         x = np.asarray(x, np.float32)
         mags = np.abs(x)
-        if self.clip_percentile >= 100.0:
+        if clip >= 100.0:
             a_obs = float(np.max(mags))
         else:
-            a_obs = float(np.percentile(mags, self.clip_percentile))
+            a_obs = float(np.percentile(mags, clip))
         a_scale = max(a_obs / spec.a_max, 1e-8)
         gain = None
         if self.use_calibrated_gain:
@@ -363,10 +425,29 @@ class CIMEngine(PEEngine):
 
     def _layer_spec(self, name: str) -> Tuple[CIMSpec, float]:
         cal = self.calib.get(name, LayerCalib())
-        spec = self.spec
+        spec = self._base_spec(name)
         if cal.gain is not None and self.use_calibrated_gain:
             spec = replace(spec, gain=cal.gain)
         return spec, cal.a_scale
+
+    # -- device variation ----------------------------------------------------
+
+    def _perturbed(self, name: str, q: np.ndarray, spec: CIMSpec
+                   ) -> np.ndarray:
+        """Apply weight-cell variation to the FULL quantized tensor,
+        before tile slicing — every derived view (per-tile, stacked,
+        Pallas operand) then sees identical integers, preserving the
+        nominal path's engine-equality invariants under fault."""
+        vm = self.variation
+        if vm is None or not vm.has_weight:
+            return q
+        return vm.perturb_weights(name, q, spec.w_max)
+
+    def _adc_variation(self, name: str, n_sub: int, spec: CIMSpec):
+        vm = self.variation
+        if vm is None or not vm.has_adc:
+            return None, None
+        return vm.adc_params(name, n_sub, float(spec.adc_inv_step))
 
     # -- handles -------------------------------------------------------------
 
@@ -382,11 +463,15 @@ class CIMEngine(PEEngine):
         )
 
     def conv_handle(self, name, weights, tiles, prequant=None):
-        if prequant is not None:
+        spec, _ = self._layer_spec(name)
+        if prequant is not None and spec.w_bits == 8:
             q, s = np.asarray(prequant[0]), np.asarray(prequant[1])
             s = np.asarray(s, np.float64).reshape(-1)
         else:
-            q, s = quantize_weight(weights)
+            # per-layer w_bits below the serving format's 8: requantize
+            # from the float weights onto the narrower grid
+            q, s = quantize_weight(weights, spec.w_bits)
+        q = self._perturbed(name, q, spec)
         tile_q = [
             np.ascontiguousarray(
                 q[tt.tap_row, tt.tap_col:tt.tap_col + tt.pack,
@@ -405,29 +490,38 @@ class CIMEngine(PEEngine):
         # subarray full-scale fits f32's integer range (n_c <= 1024 at
         # w8a8) — half the BLAS traffic of f64 for bit-identical codes
         m = q.shape[-1]
-        spec, _ = self._layer_spec(name)
         dot_dt = np.float32 if spec.full_scale <= 2 ** 24 else np.float64
         kc = tuple(tt.pack * (tt.c_hi - tt.c_lo) for tt in tiles)
         w_stack = np.zeros((len(tiles), max(kc), m), dot_dt)
         for i, tq in enumerate(tile_q):
             w_stack[i, :kc[i]] = tq.reshape(kc[i], m)
+        adc_inv, adc_off = self._adc_variation(name, len(tiles), spec)
         return ConvHandle(
             name=name, c_out=m,
             tile_w=[tq.astype(np.float64) for tq in tile_q],
             tile_w8=[tq.astype(np.int8) for tq in tile_q],
             kc=kc, w_stack=w_stack,
             w8_stack=w_stack.astype(np.int8),
+            adc_inv=adc_inv, adc_off=adc_off,
             **self._common(name, s),
         )
 
     def fc_handle(self, name, w, prequant=None):
-        if prequant is not None:
+        spec, _ = self._layer_spec(name)
+        if prequant is not None and spec.w_bits == 8:
             q, s = np.asarray(prequant[0]), np.asarray(prequant[1])
             s = np.asarray(s, np.float64).reshape(-1)
         else:
-            q, s = quantize_weight(w)
+            q, s = quantize_weight(w, spec.w_bits)
+        q = self._perturbed(name, q, spec)
+        # one physical per-subarray ADC every n_c weight rows; grid tiles
+        # index into this shared pool by k0 // n_c (see fc_mac)
+        n_alloc = 2 * math.ceil(q.shape[0] / spec.n_c) + 1
+        adc_inv, adc_off = self._adc_variation(name, n_alloc, spec)
         return FCHandle(name=name, w=q.astype(np.float64),
-                        w8=q.astype(np.int8), **self._common(name, s))
+                        w8=q.astype(np.int8),
+                        adc_inv=adc_inv, adc_off=adc_off,
+                        **self._common(name, s))
 
     # -- the numerics --------------------------------------------------------
 
@@ -435,12 +529,17 @@ class CIMEngine(PEEngine):
         """Static per-layer activation quantization (int-valued f64)."""
         return np.clip(np.round(x / h.a_scale), -h.a_clip - 1, h.a_clip)
 
-    def _adc(self, d: np.ndarray, h) -> np.ndarray:
+    def _adc(self, d: np.ndarray, h, t: Optional[int] = None) -> np.ndarray:
         """The SAR conversion, bit-for-bit the jnp/Pallas arithmetic —
         the shared :func:`repro.core.cim.adc_convert` (exact int dot ->
         int32 -> float32, scale by the f32 inverse step, round
-        half-to-even, saturate)."""
-        return adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        half-to-even, saturate).  ``t`` selects the tile's per-subarray
+        ADC parameters when a variation model is attached."""
+        if h.adc_inv is None:
+            return adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        i = 0 if t is None else t
+        return adc_convert(d, h.adc_inv[i], h.code_lo, h.code_hi,
+                           h.adc_off[i])
 
     def quant_stream(self, h, x):
         return self._quant(x, h)
@@ -455,7 +554,7 @@ class CIMEngine(PEEngine):
                 px = self._quant(px, h)
             p = gemm_rows(px, w[i])
             d = p if d is None else d + p  # exact ints: order-free
-        return self._adc(d, h)
+        return self._adc(d, h, t)
 
     def tiles_mac(self, h, patches):
         """Batch-of-tiles MAC — the fused trace path's one call per
@@ -468,7 +567,12 @@ class CIMEngine(PEEngine):
         exact in f64, so this equals the per-tile chain/group fold
         bit-for-bit in any association order."""
         d = np.matmul(patches, h.w_stack)            # (T, R, M) exact dots
-        codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        if h.adc_inv is None:
+            codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        else:
+            codes = adc_convert(d, h.adc_inv[:, None, None],
+                                h.code_lo, h.code_hi,
+                                h.adc_off[:, None, None])
         return codes.sum(axis=0)
 
     def finalize_conv(self, h, acc):
@@ -496,7 +600,13 @@ class CIMEngine(PEEngine):
         xs = xq.reshape(-1, n_sub, n_c).transpose(1, 0, 2)
         ws = w.reshape(n_sub, n_c, -1)
         d = np.matmul(xs, ws)                # (n_sub, B, N) exact dots
-        codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        if h.adc_inv is None:
+            codes = adc_convert(d, h.inv_step32, h.code_lo, h.code_hi)
+        else:
+            sub = k0 // n_c + np.arange(n_sub)
+            codes = adc_convert(d, h.adc_inv[sub, None, None],
+                                h.code_lo, h.code_hi,
+                                h.adc_off[sub, None, None])
         return codes.sum(axis=0)
 
     def finalize_fc(self, h, psum, n0, n1):
@@ -515,18 +625,23 @@ class PallasEngine(CIMEngine):
     name = "pallas"
 
     def __init__(self, spec: CIMSpec = DEFAULT_SPEC,
-                 use_calibrated_gain: bool = True, interpret: bool = True):
-        super().__init__(spec, use_calibrated_gain)
+                 use_calibrated_gain: bool = True, interpret: bool = True,
+                 clip_percentile: Optional[float] = None,
+                 variation: Optional[VariationModel] = None):
+        super().__init__(spec, use_calibrated_gain,
+                         clip_percentile=clip_percentile, variation=variation)
         self.interpret = interpret
 
-    def _codes(self, xq8: np.ndarray, wq8: np.ndarray, spec: CIMSpec
-               ) -> np.ndarray:
+    def _codes(self, xq8: np.ndarray, wq8: np.ndarray, spec: CIMSpec,
+               adc_var: Optional[np.ndarray] = None) -> np.ndarray:
         import jax.numpy as jnp
 
         from repro.kernels.cim_matmul import cim_matmul_pallas
 
-        codes = cim_matmul_pallas(jnp.asarray(xq8), jnp.asarray(wq8), spec,
-                                  interpret=self.interpret, emit_codes=True)
+        codes = cim_matmul_pallas(
+            jnp.asarray(xq8), jnp.asarray(wq8), spec,
+            interpret=self.interpret, emit_codes=True,
+            adc_var=None if adc_var is None else jnp.asarray(adc_var))
         return np.asarray(codes, np.float64)
 
     def tile_mac(self, h, t, taps, quantized=False):
@@ -535,7 +650,10 @@ class PallasEngine(CIMEngine):
             taps = [self._quant(px, h) for px in taps]
         xq = np.concatenate(taps, axis=1).astype(np.int8)
         wq = h.tile_w8[t][:n].reshape(-1, h.c_out)
-        return self._codes(xq, wq, h.spec)
+        av = None
+        if h.adc_inv is not None:  # one tile == one subarray == one K step
+            av = np.stack([h.adc_inv[t:t + 1], h.adc_off[t:t + 1]], axis=1)
+        return self._codes(xq, wq, h.spec, av)
 
     def tiles_mac(self, h, patches):
         """Batch-of-tiles MAC through ONE multi-tile ``emit_codes``
@@ -554,14 +672,25 @@ class PallasEngine(CIMEngine):
             h.w8_sub = sub.reshape(t * n_c, h.c_out)
         x = np.zeros((r, t, n_c), np.int8)
         x[:, :, :kcm] = patches.transpose(1, 0, 2)
+        av = None
+        if h.adc_inv is not None:  # kernel K step i == chain tile i
+            av = np.stack([h.adc_inv, h.adc_off], axis=1)
         codes = cim_chain_codes_pallas(x.reshape(r, t * n_c), h.w8_sub,
-                                       h.spec, interpret=self.interpret)
+                                       h.spec, interpret=self.interpret,
+                                       adc_var=av)
         return np.asarray(codes, np.float64)
 
     def fc_mac(self, h, x, k0, k1, n0, n1, quantized=False):
         xq = (x if quantized else self._quant(x, h)).astype(np.int8)
+        av = None
+        if h.adc_inv is not None:
+            # the kernel zero-pads K to n_c exactly like CIMEngine.fc_mac,
+            # so K step i is global subarray k0 // n_c + i
+            n_sub = -(-(k1 - k0) // h.spec.n_c)
+            sub = k0 // h.spec.n_c + np.arange(n_sub)
+            av = np.stack([h.adc_inv[sub], h.adc_off[sub]], axis=1)
         return self._codes(xq, np.ascontiguousarray(h.w8[k0:k1, n0:n1]),
-                           h.spec)
+                           h.spec, av)
 
 
 #: module-level default — the drop-in for every pre-engine call site

@@ -364,7 +364,13 @@ class NetworkSimulator:
             raise ValueError(
                 "calib_images has no effect on the exact engine")
         self._handles: Dict[int, object] = {}
-        for li, layer in enumerate(cnn.layers):
+        self._build_handles()
+
+    def _build_handles(self) -> None:
+        """(Re)build every layer's engine handle — the only per-trial
+        work a device-variation swap needs (schedules, trace plans,
+        placement and calibration all survive unchanged)."""
+        for li, layer in enumerate(self.cnn.layers):
             if isinstance(layer, ConvLayer):
                 sched0 = self.schedules[li]
                 if sched0 is None:
@@ -383,6 +389,25 @@ class NetworkSimulator:
                 self._handles[li] = self.pe_engine.fc_handle(
                     layer.name, self.params[layer.name],
                     prequant=self._prequant.get(layer.name))
+
+    def set_variation(self, variation) -> None:
+        """Swap the quantized engine's device-variation model
+        (``core/variation.py``) and rebuild only the engine handles —
+        the cheap per-trial path of the Monte-Carlo robustness harness
+        (``runtime/robustness.py``).  Cached trace executors keep their
+        compiled plans; their handle references and jitted closures
+        (which bake the perturbed weights / ADC parameters) are
+        refreshed so the very next run reflects the new draw."""
+        if not hasattr(self.pe_engine, "variation"):
+            raise ValueError(
+                "set_variation requires a quantized engine "
+                "(cim/pallas); the exact engine has no device physics")
+        self.pe_engine.variation = variation
+        self._build_handles()
+        for (li, _si), ex in self._executors.items():
+            ex.handle = self._handles[li]
+            ex.weights = ex.handle.tile_w
+            ex._jax_fn = None
 
     def _executor(self, li: int, si: int, sched: BlockSchedule,
                   transport: NoCTransport, counters: SimCounters):

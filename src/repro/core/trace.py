@@ -351,7 +351,13 @@ class TraceExecutor:
         kcs, kcm = h.kc, max(h.kc)
         w8 = np.zeros((len(plan.tiles), kcm, s.c_out), np.int8)
         w8[:, :h.w8_stack.shape[1]] = h.w8_stack
-        inv = np.float32(h.inv_step32)
+        if h.adc_inv is None:
+            inv, off = np.float32(h.inv_step32), None
+        else:
+            # per-subarray ADC variation rides the same fused dot: the
+            # (T,) arrays broadcast over the (T, B, EF, M) code tensor
+            inv = np.asarray(h.adc_inv, np.float32).reshape(-1, 1, 1, 1)
+            off = np.asarray(h.adc_off, np.float32).reshape(-1, 1, 1, 1)
         clo, chi = np.float32(h.code_lo), np.float32(h.code_hi)
 
         def fn(stream, w8s):
@@ -367,8 +373,10 @@ class TraceExecutor:
             x = jnp.stack(pats)                          # (T, B, EF, kc) i8
             d = lax.dot_general(x, w8s, (((3,), (1,)), ((0,), (0,))),
                                 preferred_element_type=jnp.int32)
-            codes = jnp.clip(jnp.round(d.astype(jnp.float32) * inv),
-                             clo, chi)
+            acc = d.astype(jnp.float32) * inv
+            if off is not None:
+                acc = acc + off
+            codes = jnp.clip(jnp.round(acc), clo, chi)
             return codes.sum(axis=0)                     # exact int sum
 
         jitted = jax.jit(fn)

@@ -3,10 +3,17 @@
     PYTHONPATH=src python -m repro.dse                       # CIFAR models
     PYTHONPATH=src python -m repro.dse --models vgg16-imagenet --budget 64
     PYTHONPATH=src python -m repro.dse --smoke               # CI-sized run
+    PYTHONPATH=src python -m repro.dse --robust --trials 20  # precision DSE
 
 ``--smoke`` shrinks the space (two strategies, one aspect) and skips
 nothing the acceptance cares about: the winner is still bitwise-
 validated against the snake baseline.
+
+``--robust`` runs the robustness DSE instead: mapping x bit-scalable
+precision, with every precision point's top-1 agreement measured on the
+compiled quantized trace path under the "all" device-variation corner
+(``--trials`` Monte-Carlo draws each).  Exits non-zero if any model's
+zero-magnitude variation run is not bitwise-equal to nominal.
 """
 from __future__ import annotations
 
@@ -14,7 +21,13 @@ import argparse
 import sys
 
 from repro.configs.cnn import CNN_BENCHMARKS
-from repro.dse.report import run_dse, to_json, to_markdown
+from repro.dse.report import (
+    robust_to_markdown,
+    run_dse,
+    run_robust_dse,
+    to_json,
+    to_markdown,
+)
 from repro.dse.space import DesignSpace
 
 
@@ -38,7 +51,25 @@ def main(argv=None) -> int:
                     help="also write the report as JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed space for CI (<30 s)")
+    ap.add_argument("--robust", action="store_true",
+                    help="robustness DSE: precision axes + measured "
+                         "accuracy-under-variation (see module docstring)")
+    ap.add_argument("--trials", type=int, default=5,
+                    help="Monte-Carlo draws per precision point "
+                         "(--robust only)")
     args = ap.parse_args(argv)
+
+    if args.robust:
+        budget = min(args.budget, 16) if args.smoke else args.budget
+        reports = run_robust_dse(tuple(args.models), budget=budget,
+                                 seed=args.seed, trials=args.trials)
+        sys.stdout.write(robust_to_markdown(reports))
+        bad = [r.model for r in reports if r.zero_var_bitwise is False]
+        if bad:
+            print(f"# ZERO-VARIATION PATH NOT BITWISE-EQUAL: {bad}",
+                  file=sys.stderr)
+            return 1
+        return 0
 
     space_factory = None
     budget = args.budget

@@ -27,6 +27,16 @@ PARETO_AXES: Tuple[Tuple[str, int], ...] = (
     ("max_link_bytes", -1),
 )
 
+#: the robustness DSE's frontier: TOPS/W-at-precision against
+#: accuracy-under-variation (plus throughput / chip cost) — the
+#: bit-scalable trade the Princeton CIM chip demonstrates
+ROBUST_AXES: Tuple[Tuple[str, int], ...] = (
+    ("tops_per_w", +1),
+    ("acc_noisy", +1),
+    ("inf_per_s", +1),
+    ("tiles", -1),
+)
+
 
 def dominates(a, b, axes: Sequence[Tuple[str, int]] = PARETO_AXES) -> bool:
     """True iff ``a`` is no worse than ``b`` on every axis and strictly
@@ -171,6 +181,181 @@ def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
         reports.append(ModelReport(model=name, result=result,
                                    winner=winner, validated=validated))
     return reports
+
+
+# ---------------------------------------------------------------------------
+# Robustness DSE: precision axes + accuracy-under-variation
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RobustModelReport:
+    """One model's robustness search: the ROBUST_AXES Pareto front with
+    per-layer precision and measured accuracy-under-variation live."""
+
+    model: str
+    result: "SearchResult"
+    variation: object                # the swept VariationModel
+    trials: int
+    front: List[Candidate]
+    zero_var_bitwise: Optional[bool]
+
+    def best_accuracy(self) -> Candidate:
+        return max(self.front, key=lambda c: (c.score.acc_noisy,
+                                              c.score.tops_per_w))
+
+    def best_efficiency(self) -> Candidate:
+        return max(self.front, key=lambda c: (c.score.tops_per_w,
+                                              c.score.acc_noisy))
+
+    def pareto_rows(self) -> List[Dict]:
+        rows = [{"config": c.config.describe(), **c.score.as_dict()}
+                for c in self.front]
+        return sorted(rows, key=lambda r: -r["acc_noisy"])
+
+
+def run_robust_dse(models: Sequence[str] = ("vgg11-cifar10",
+                                            "resnet18-cifar10"),
+                   budget: int = 32, seed: int = 0, trials: int = 5,
+                   batch: int = 4, variation=None, engine: str = "cim",
+                   base_spec=None,
+                   space_factory: Optional[Callable[[CNNConfig],
+                                                    DesignSpace]] = None
+                   ) -> List[RobustModelReport]:
+    """The robustness DSE: search mapping x precision, measuring every
+    distinct precision point's accuracy on the compiled quantized trace
+    path under ``variation`` (``trials`` Monte-Carlo draws), and keep
+    the ``ROBUST_AXES`` frontier — TOPS/W-at-precision vs
+    accuracy-under-variation.
+
+    Beyond the enumerated network-wide ``base_bits`` grid, two
+    deterministic per-layer probes join the candidate pool (first conv
+    and the FC head dropped to the most aggressive bits choice) so the
+    per-layer ``(w_bits, a_bits, adc_bits)`` axis is exercised even when
+    the mapping sub-space sweeps exhaustively (per-layer overrides are
+    otherwise mutation-only, like ``dup_overrides``).
+    """
+    import jax
+
+    from dataclasses import replace as _cfg_replace
+
+    from repro.core.cim import DEFAULT_SPEC
+    from repro.core.variation import VARIATION_PRESETS
+    from repro.dse.space import layer_specs_for
+    from repro.models.cnn import init_cnn
+    from repro.runtime.robustness import _float_reference, monte_carlo_sweep
+
+    if variation is None:
+        variation = VARIATION_PRESETS["all"]
+    spec = DEFAULT_SPEC if base_spec is None else base_spec
+
+    reports: List[RobustModelReport] = []
+    for name in models:
+        cnn = CNN_BENCHMARKS[name]()
+        params = {k: np.asarray(v, np.float64) for k, v in
+                  init_cnn(jax.random.PRNGKey(seed), cnn).items()}
+        rng = np.random.default_rng(seed)
+        images = rng.random((batch, cnn.input_hw, cnn.input_hw, 3))
+        ref = _float_reference(cnn, params, images)
+        dup_cap = 128 if name == "resnet50-imagenet" else 64
+        space = space_factory(cnn) if space_factory else DesignSpace(
+            cnn, strategy_names=("snake", "hilbert"), aspects=(1.0,),
+            reuses=(1,), dup_caps=(dup_cap,),
+            base_bits_choices=((8, 8, 8), (8, 8, 6), (6, 6, 6)),
+            layer_bits_choices=((6, 6, 4),))
+        aggressive = min(space.layer_bits_choices
+                         or space.base_bits_choices)
+
+        zero_ok: List[Optional[bool]] = []
+
+        def accuracy_fn(cfg):
+            ls = layer_specs_for(cfg, spec, space.layer_names)
+            rep = monte_carlo_sweep(
+                cnn, params, images, variation, trials, engine=engine,
+                spec=spec, layer_specs=ls, seed0=seed,
+                check_zero=not zero_ok, ref_logits=ref)
+            if rep.zero_var_bitwise is not None:
+                zero_ok.append(rep.zero_var_bitwise)
+            return rep.nominal_agree, rep.agree_float.mean
+
+        # memoize by precision point so the probes below reuse draws
+        memo: Dict[Tuple, Tuple[float, float]] = {}
+
+        def cached_acc(cfg):
+            key = cfg.precision_key
+            if key not in memo:
+                memo[key] = accuracy_fn(cfg)
+            return memo[key]
+
+        result = search(cnn, space, budget=budget, seed=seed,
+                        dup_cap=dup_cap, cim_spec=spec,
+                        accuracy_fn=cached_acc)
+
+        # deterministic per-layer precision probes on the most efficient
+        # mapping found: dropping the first conv and the head to the
+        # aggressive bits choice strictly raises TOPS/W-at-precision, so
+        # the probe is non-dominated and per-layer precision shows up on
+        # the front with its measured accuracy cost
+        from repro.dse.search import evaluate
+        base_cfg = max(result.candidates,
+                       key=lambda c: c.score.tops_per_w).config
+        probe_layers = (space.conv_names[0], space.layer_names[-1])
+        for ln in probe_layers:
+            cfg = _cfg_replace(base_cfg,
+                               precision=((ln, tuple(aggressive)),))
+            if any(c.config == cfg for c in result.candidates):
+                continue
+            built = space.build(cfg)
+            if built is None:
+                continue
+            result.candidates.append(
+                evaluate(cnn, built, spec, accuracy=cached_acc(cfg)))
+            result.evaluations += 1
+
+        front = pareto_front(result.candidates, axes=ROBUST_AXES)
+        reports.append(RobustModelReport(
+            model=name, result=result, variation=variation, trials=trials,
+            front=front,
+            zero_var_bitwise=zero_ok[0] if zero_ok else None))
+    return reports
+
+
+def robust_to_markdown(reports: Sequence[RobustModelReport]) -> str:
+    """The robustness table: nominal vs noisy top-1 agreement for each
+    model's accuracy- and efficiency-winners, then the full precision-
+    aware frontier."""
+    lines = ["# Domino robustness DSE report", ""]
+    if reports:
+        v = reports[0].variation
+        lines += [f"Variation corner: `{v.describe()}`, "
+                  f"{reports[0].trials} Monte-Carlo trials per precision "
+                  "point (compiled quantized trace path).", "",
+                  "## Winners: nominal vs noisy top-1 agreement", "",
+                  "| model | winner | config | TOPS/W | top-1 nominal | "
+                  "top-1 noisy (MC mean) | zero-var bitwise |",
+                  "|---|---|---|---|---|---|---|"]
+    for rep in reports:
+        z = {True: "==", False: "MISMATCH", None: "n/a"}[
+            rep.zero_var_bitwise]
+        for label, cand in (("best accuracy", rep.best_accuracy()),
+                            ("best TOPS/W", rep.best_efficiency())):
+            s = cand.score
+            lines.append(
+                f"| {rep.model} | {label} | {cand.config.describe()} "
+                f"| {s.tops_per_w:.2f} | {s.acc_nominal:.3f} "
+                f"| {s.acc_noisy:.3f} | {z} |")
+    for rep in reports:
+        lines += ["", f"## {rep.model} precision/robustness frontier "
+                      f"({rep.result.evaluations} evaluations)", "",
+                  "| config | TOPS/W | acc nominal | acc noisy | inf/s | "
+                  "tiles |",
+                  "|---|---|---|---|---|---|"]
+        for r in rep.pareto_rows():
+            lines.append(
+                f"| {r['config']} | {r['tops_per_w']:.2f} "
+                f"| {r['acc_nominal']:.3f} | {r['acc_noisy']:.3f} "
+                f"| {r['inf_per_s']:.3g} | {r['tiles']:.0f} |")
+    return "\n".join(lines) + "\n"
 
 
 # ---------------------------------------------------------------------------

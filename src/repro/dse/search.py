@@ -27,7 +27,7 @@ from repro.core.energy import analyze_plan
 from repro.core.mapping import NetworkPlan
 from repro.core.noc import Placement
 from repro.dse.placements import network_links
-from repro.dse.space import Built, DesignSpace, MappingConfig
+from repro.dse.space import Built, DesignSpace, MappingConfig, layer_specs_for
 
 
 @dataclass(frozen=True)
@@ -41,6 +41,12 @@ class Score:
     total_byte_hops: float  # routed traffic volume x distance (minimize)
     energy_uj: float        # per-inference total, for the report
     adc_share: float = 0.0  # ADC fraction of total (precision-aware scoring)
+    # robustness axes (None unless the search ran with an accuracy_fn —
+    # a NaN sentinel would break Score equality): top-1 agreement vs the
+    # float32 forward, nominal and Monte-Carlo mean under the sweep's
+    # device-variation model
+    acc_nominal: Optional[float] = None
+    acc_noisy: Optional[float] = None
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -51,6 +57,8 @@ class Score:
             "total_byte_hops": self.total_byte_hops,
             "energy_uj": self.energy_uj,
             "adc_share": self.adc_share,
+            "acc_nominal": self.acc_nominal,
+            "acc_noisy": self.acc_noisy,
         }
 
 
@@ -79,15 +87,26 @@ def routed_traffic(plan: NetworkPlan, placement: Placement,
 
 
 def evaluate(cnn: CNNConfig, built: Built,
-             cim_spec: "CIMSpec | None" = None) -> Candidate:
+             cim_spec: "CIMSpec | None" = None,
+             accuracy: Optional[Tuple[float, float]] = None) -> Candidate:
     """Score one built mapping.  ``cim_spec`` engages the precision-aware
     CIM energy model (``core/energy.py``) so the Pareto front reports
     *quantized* TOPS/W — ADC conversion energy scaling with ``adc_bits``
     over the mapping's actual subarray count — instead of the flat
-    fully-utilized Tab. 4 anchor."""
+    fully-utilized Tab. 4 anchor.  Configs carrying a non-nominal
+    precision point (``base_bits``/per-layer overrides) are charged at
+    their per-layer bits (TOPS/W-at-precision); ``accuracy`` is the
+    ``(nominal, noisy)`` top-1-agreement pair measured for that
+    precision point (the accuracy-under-variation axis)."""
+    layer_specs = None
+    if cim_spec is not None and (built.config.base_bits != (8, 8, 8)
+                                 or built.config.precision):
+        layer_specs = layer_specs_for(
+            built.config, cim_spec, tuple(l.name for l in cnn.layers))
     rep = analyze_plan(cnn, built.plan, placement=built.placement,
-                       cim_spec=cim_spec)
+                       cim_spec=cim_spec, layer_specs=layer_specs)
     byte_hops, max_link = routed_traffic(built.plan, built.placement, cnn)
+    acc_nom, acc_noisy = (None, None) if accuracy is None else accuracy
     return Candidate(
         config=built.config, plan=built.plan, placement=built.placement,
         score=Score(
@@ -98,6 +117,8 @@ def evaluate(cnn: CNNConfig, built: Built,
             total_byte_hops=byte_hops,
             energy_uj=rep.e_total * 1e6,
             adc_share=rep.adc_share,
+            acc_nominal=acc_nom,
+            acc_noisy=acc_noisy,
         ))
 
 
@@ -145,7 +166,10 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
            budget: int = 128, seed: int = 0,
            dup_cap: Optional[int] = None,
            objective: Callable[[Score], float] = byte_hop_objective,
-           cim_spec: "CIMSpec | None" = None) -> SearchResult:
+           cim_spec: "CIMSpec | None" = None,
+           accuracy_fn: Optional[Callable[[MappingConfig],
+                                          Tuple[float, float]]] = None
+           ) -> SearchResult:
     """Explore ``space`` with at most ``budget`` evaluations.
 
     Small spaces sweep exhaustively; larger ones run seeded simulated
@@ -153,16 +177,36 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
     The snake baseline is always evaluated and included.  ``cim_spec``
     scores every candidate with the precision-aware quantized energy
     model (see :func:`evaluate`).
+
+    ``accuracy_fn(config) -> (nominal, noisy)`` attaches measured top-1
+    agreement (nominal quantized, and Monte-Carlo mean under variation)
+    to every candidate.  Accuracy depends only on the config's
+    *precision point* — placement and duplication move bytes, never
+    math — so the (expensive: it runs the compiled quantized trace
+    path) callback is invoked once per distinct ``precision_key`` and
+    memoized across the whole search.
     """
     if space is None:
         space = DesignSpace(cnn)
     if dup_cap is None:
         dup_cap = max(space.dup_caps)
+
+    acc_cache: Dict[Tuple, Tuple[float, float]] = {}
+
+    def acc_of(cfg: MappingConfig) -> Optional[Tuple[float, float]]:
+        if accuracy_fn is None:
+            return None
+        key = cfg.precision_key
+        if key not in acc_cache:
+            acc_cache[key] = accuracy_fn(cfg)
+        return acc_cache[key]
+
     base_built = space.build(baseline_config(dup_cap))
     if base_built is None:
         raise ValueError(f"{cnn.name}: the snake baseline itself is "
                          "infeasible — space misconfigured")
-    baseline = evaluate(cnn, base_built, cim_spec)
+    baseline = evaluate(cnn, base_built, cim_spec,
+                        accuracy=acc_of(base_built.config))
 
     seen: Dict[MappingConfig, Candidate] = {baseline.config: baseline}
     evals = 1
@@ -177,7 +221,7 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
         evals += 1
         if built is None:
             return None
-        cand = evaluate(cnn, built, cim_spec)
+        cand = evaluate(cnn, built, cim_spec, accuracy=acc_of(cfg))
         seen[cfg] = cand
         return cand
 

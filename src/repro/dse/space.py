@@ -2,11 +2,16 @@
 
 A :class:`MappingConfig` is one point: a placement strategy, a mesh
 aspect ratio, the block-reuse depth and weight-duplication cap (the
-paper's Fig. 7 knobs), plus optional per-layer duplication overrides.
+paper's Fig. 7 knobs), plus optional per-layer duplication overrides —
+and, for the robustness DSE, bit-scalable precision: a network-wide
+``base_bits = (w_bits, a_bits, adc_bits)`` with optional per-layer
+``precision`` overrides (the Princeton bit-scalable-CIM lever, threaded
+to ``CIMEngine.set_layer_spec`` via :func:`layer_specs_for`).
 :class:`DesignSpace` enumerates the grid of points and *builds* them —
 ``plan_network`` is the feasibility oracle (a config whose plan fails to
 build, whose tiles don't fit the mesh, or whose placement violates the
-rendezvous slack is simply infeasible and skipped).
+rendezvous slack is simply infeasible and skipped).  Precision never
+changes geometry, so it multiplies the grid without re-planning cost.
 """
 from __future__ import annotations
 
@@ -24,6 +29,9 @@ from repro.dse.placements import (
     validate_placement,
 )
 
+#: (w_bits, a_bits, adc_bits)
+BitsTriple = Tuple[int, int, int]
+
 
 @dataclass(frozen=True)
 class MappingConfig:
@@ -36,6 +44,10 @@ class MappingConfig:
     band: int = 2                # boustrophedon band height
     #: per-layer duplication caps, sorted name order (hashability)
     dup_overrides: Tuple[Tuple[str, int], ...] = ()
+    #: network-wide (w_bits, a_bits, adc_bits)
+    base_bits: BitsTriple = (8, 8, 8)
+    #: per-layer (w, a, adc) overrides, sorted name order
+    precision: Tuple[Tuple[str, BitsTriple], ...] = ()
 
     def describe(self) -> str:
         bits = [self.strategy, f"aspect={self.aspect:g}",
@@ -45,7 +57,33 @@ class MappingConfig:
         if self.dup_overrides:
             bits.append("dups={" + ",".join(
                 f"{n}:{v}" for n, v in self.dup_overrides) + "}")
+        if self.base_bits != (8, 8, 8):
+            w, a, adc = self.base_bits
+            bits.append(f"w{w}a{a}adc{adc}")
+        if self.precision:
+            bits.append("bits={" + ",".join(
+                f"{n}:w{w}a{a}adc{c}" for n, (w, a, c) in self.precision)
+                + "}")
         return " ".join(bits)
+
+    @property
+    def precision_key(self) -> Tuple:
+        """The part of the config that determines *accuracy* (placement
+        and duplication never change math) — the accuracy cache key."""
+        return (self.base_bits, self.precision)
+
+
+def layer_specs_for(cfg: MappingConfig, base_spec,
+                    layer_names: Tuple[str, ...]) -> Dict[str, object]:
+    """``{layer name: CIMSpec}`` realizing the config's precision point
+    over ``base_spec`` (geometry/gain kept, bits swapped) — consumable
+    by ``CIMEngine.set_layer_spec`` and ``analyze_plan(layer_specs=)``."""
+    wb, ab, adcb = cfg.base_bits
+    base = replace(base_spec, w_bits=wb, a_bits=ab, adc_bits=adcb)
+    out = {name: base for name in layer_names}
+    for name, (w, a, adc) in cfg.precision:
+        out[name] = replace(base_spec, w_bits=w, a_bits=a, adc_bits=adc)
+    return out
 
 
 def mesh_shape_for(total: int, aspect: float) -> Tuple[int, int]:
@@ -80,7 +118,9 @@ class DesignSpace:
                  reuses: Tuple[int, ...] = (1, 2, 4),
                  dup_caps: Tuple[int, ...] = (MAX_DUPLICATION,),
                  bands: Tuple[int, ...] = (2, 3),
-                 n_c: int = 256, n_m: int = 256):
+                 n_c: int = 256, n_m: int = 256,
+                 base_bits_choices: Tuple[BitsTriple, ...] = ((8, 8, 8),),
+                 layer_bits_choices: Tuple[BitsTriple, ...] = ()):
         self.cnn = cnn
         self.strategy_names = strategy_names
         self.aspects = aspects
@@ -88,30 +128,38 @@ class DesignSpace:
         self.dup_caps = dup_caps
         self.bands = bands
         self.n_c, self.n_m = n_c, n_m
+        #: network-wide precision grid (enumerated); (8,8,8) is nominal
+        self.base_bits_choices = base_bits_choices
+        #: per-layer precision override values (mutation-only, like
+        #: dup_overrides — enumerating them would be exponential)
+        self.layer_bits_choices = layer_bits_choices
         self.conv_names: Tuple[str, ...] = tuple(
             l.name for l in cnn.layers if isinstance(l, ConvLayer))
+        self.layer_names: Tuple[str, ...] = tuple(
+            l.name for l in cnn.layers)
         self._strategies: Dict[int, Dict[str, PlacementStrategy]] = {}
 
     # -- enumeration --------------------------------------------------------
 
     def configs(self) -> Iterator[MappingConfig]:
-        for strat, aspect, reuse, cap in itertools.product(
+        for strat, aspect, reuse, cap, bb in itertools.product(
                 self.strategy_names, self.aspects, self.reuses,
-                self.dup_caps):
+                self.dup_caps, self.base_bits_choices):
             if strat == "boustrophedon":
                 for band in self.bands:
                     yield MappingConfig(strategy=strat, aspect=aspect,
-                                        reuse=reuse, dup_cap=cap, band=band)
+                                        reuse=reuse, dup_cap=cap, band=band,
+                                        base_bits=bb)
             else:
                 yield MappingConfig(strategy=strat, aspect=aspect,
-                                    reuse=reuse, dup_cap=cap)
+                                    reuse=reuse, dup_cap=cap, base_bits=bb)
 
     @property
     def size(self) -> int:
         n_strat = sum(len(self.bands) if s == "boustrophedon" else 1
                       for s in self.strategy_names)
         return n_strat * len(self.aspects) * len(self.reuses) \
-            * len(self.dup_caps)
+            * len(self.dup_caps) * len(self.base_bits_choices)
 
     # -- mutation (the annealer's neighborhood) ------------------------------
 
@@ -125,7 +173,24 @@ class DesignSpace:
         knobs = ["strategy", "aspect", "reuse", "dup_cap", "dup_override"]
         if cfg.strategy == "boustrophedon":
             knobs.append("band")
+        if len(self.base_bits_choices) > 1:
+            knobs.append("base_bits")
+        if self.layer_bits_choices:
+            knobs.append("layer_bits")
         knob = rng.choice(knobs)
+        if knob == "base_bits":
+            return replace(cfg,
+                           base_bits=rng.choice(self.base_bits_choices))
+        if knob == "layer_bits":
+            # toggle one layer's precision override (set or lift), the
+            # same neighborhood shape as dup_override
+            name = rng.choice(self.layer_names)
+            prec = dict(cfg.precision)
+            if name in prec:
+                del prec[name]
+            else:
+                prec[name] = rng.choice(self.layer_bits_choices)
+            return replace(cfg, precision=tuple(sorted(prec.items())))
         if knob == "strategy":
             strat = rng.choice(self.strategy_names)
             band = cfg.band if strat == "boustrophedon" \

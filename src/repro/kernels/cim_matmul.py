@@ -62,6 +62,36 @@ def _cim_kernel(x_ref, w_ref, o_ref, *, nk: int, inv_step: float, step: float,
             o_ref[...] *= step
 
 
+def _cim_kernel_var(x_ref, w_ref, adc_ref, o_ref, *, nk: int, step: float,
+                    q_max: int, emit_codes: bool):
+    """The device-variation flavor: K step ``k``'s subarray converts with
+    its OWN per-ADC ``(inverse step, offset)`` pair, streamed in as a
+    (1, 2) f32 block — the same f32 multiply(+add)/round/saturate ops as
+    the numpy :func:`repro.core.cim.adc_convert`, so codes stay bitwise
+    across backends under a ``VariationModel``."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    codes = jnp.clip(
+        jnp.round(d.astype(jnp.float32) * adc_ref[0, 0] + adc_ref[0, 1]),
+        -float(q_max + 1), float(q_max),
+    )
+    o_ref[...] += codes
+
+    if not emit_codes:
+        @pl.when(k == nk - 1)
+        def _scale():
+            o_ref[...] *= step
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("spec", "block_m", "block_n", "interpret", "emit_codes"),
@@ -70,7 +100,8 @@ def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
                       spec: CIMSpec = DEFAULT_SPEC,
                       block_m: int = 256, block_n: int = 256,
                       interpret: bool = True,
-                      emit_codes: bool = False) -> jax.Array:
+                      emit_codes: bool = False,
+                      adc_var: "jax.Array | None" = None) -> jax.Array:
     """(M, K) int8 @ (K, N) int8 -> (M, N) f32 through the CIM pipeline.
 
     Pads every dim to its block multiple; K blocks are ``spec.n_c`` wide so
@@ -78,7 +109,10 @@ def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
     in Python on CPU (validation target); on a real TPU pass False.
     ``emit_codes=True`` skips the final step scaling and returns the raw
     digitally-accumulated ADC code sums (integers in f32) — the quantity
-    the engine layer accumulates along a tile chain.
+    the engine layer accumulates along a tile chain.  ``adc_var`` is an
+    optional (nk, 2) f32 array of per-subarray ``[inverse step, offset]``
+    ADC parameters (device variation); K step ``k`` reads row ``k``.  It
+    is a traced operand, so Monte-Carlo trials reuse one compiled kernel.
     """
     m, k_dim = xq.shape
     k2, n = wq.shape
@@ -96,32 +130,44 @@ def cim_matmul_pallas(xq: jax.Array, wq: jax.Array,
     nk = kp // n_c
     grid = (mp // bm, np_ // bn, nk)
 
-    kernel = functools.partial(
-        _cim_kernel, nk=nk, inv_step=spec.adc_inv_step, step=spec.adc_step,
-        q_max=spec.q_max, emit_codes=emit_codes,
-    )
+    in_specs = [
+        pl.BlockSpec((bm, n_c), lambda i, j, k: (i, k)),
+        pl.BlockSpec((n_c, bn), lambda i, j, k: (k, j)),
+    ]
+    if adc_var is None:
+        kernel = functools.partial(
+            _cim_kernel, nk=nk, inv_step=spec.adc_inv_step,
+            step=spec.adc_step, q_max=spec.q_max, emit_codes=emit_codes,
+        )
+        operands = (xq, wq)
+    else:
+        assert adc_var.shape == (nk, 2), (adc_var.shape, nk)
+        kernel = functools.partial(
+            _cim_kernel_var, nk=nk, step=spec.adc_step,
+            q_max=spec.q_max, emit_codes=emit_codes,
+        )
+        in_specs.append(pl.BlockSpec((1, 2), lambda i, j, k: (k, 0)))
+        operands = (xq, wq, adc_var.astype(jnp.float32))
     kwargs = {}
     if _COMPILER_PARAMS is not None and not interpret:
         kwargs["compiler_params"] = _COMPILER_PARAMS
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, n_c), lambda i, j, k: (i, k)),
-            pl.BlockSpec((n_c, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
         **kwargs,
-    )(xq, wq)
+    )(*operands)
     return out[:m, :n]
 
 
 def cim_chain_codes_pallas(xq: jax.Array, wq: jax.Array,
                            spec: CIMSpec = DEFAULT_SPEC,
                            block_m: int = 256, block_n: int = 256,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool = True,
+                           adc_var: "jax.Array | None" = None) -> jax.Array:
     """Multi-tile ``emit_codes`` invocation: one kernel call for a whole
     tile chain.
 
@@ -136,8 +182,10 @@ def cim_chain_codes_pallas(xq: jax.Array, wq: jax.Array,
     """
     assert xq.shape[1] == wq.shape[0] and xq.shape[1] % spec.n_c == 0, (
         xq.shape, wq.shape, spec.n_c)
-    return cim_matmul_pallas(xq, wq, spec, block_m=block_m, block_n=block_n,
-                             interpret=interpret, emit_codes=True)
+    return cim_matmul_pallas(
+        xq, wq, spec, block_m=block_m, block_n=block_n,
+        interpret=interpret, emit_codes=True,
+        adc_var=None if adc_var is None else jnp.asarray(adc_var))
 
 
 def _round_up(x: int, mult: int) -> int:

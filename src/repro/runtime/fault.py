@@ -20,9 +20,21 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
+
+#: fault types :class:`StepGuard` retries.  XLA device/runtime failures
+#: (ICI timeout, halted collective, preempted device) surface as
+#: ``jaxlib``'s ``XlaRuntimeError`` — a ``RuntimeError`` subclass — and
+#: pod/filesystem flakiness as ``OSError`` (``ConnectionError`` and
+#: ``TimeoutError`` are its subclasses).  Anything else propagates
+#: immediately: retrying a programming error (``ValueError``,
+#: ``TypeError``) just burns the backoff ladder, and swallowing
+#: ``KeyboardInterrupt`` / ``SystemExit`` — which a bare ``except
+#: Exception`` at least got right, but an over-broad ``except
+#: BaseException`` would not — turns a cancel into silent replays.
+RETRYABLE_FAULTS: Tuple[type, ...] = (RuntimeError, OSError)
 
 
 @dataclass
@@ -58,6 +70,7 @@ class StepGuard:
     max_retries: int = 3
     backoff_s: float = 1.0
     failures: int = 0
+    retryable: Tuple[type, ...] = RETRYABLE_FAULTS
 
     def run(self, step_fn: Callable, step: int, *args):
         for attempt in range(self.max_retries + 1):
@@ -66,12 +79,14 @@ class StepGuard:
                 # block so device-side failures surface *inside* the guard
                 jax.block_until_ready(out)
                 return out
-            except Exception:  # noqa: BLE001 — any device/runtime fault
+            except self.retryable:
                 self.failures += 1
                 if attempt == self.max_retries:
                     raise
                 time.sleep(self.backoff_s * (2 ** attempt))
                 self.recover(step - 1)
+            # everything else — including KeyboardInterrupt/SystemExit,
+            # which are not even Exceptions — propagates uncaught
         raise RuntimeError("unreachable")
 
 

@@ -1,0 +1,208 @@
+"""Deterministic Monte-Carlo robustness harness for device variation.
+
+Sweeps seeded trials of a :class:`~repro.core.variation.VariationModel`
+through the **compiled quantized trace path** — one
+``NetworkSimulator`` build (schedules, trace plans, placement,
+calibration all amortized), then per trial only the engine handles are
+rebuilt (``NetworkSimulator.set_variation``) and the fused batched
+lowering re-runs.  No per-tile Python executes inside the trial loop;
+post-PR 6 that makes a 20-trial vgg11 sweep a seconds-scale affair.
+
+Reported accuracy is top-1 agreement (this reproduction runs random
+init weights, so agreement against the nominal quantized run and
+against the float reference are the meaningful axes — the same metric
+the ``cim_*`` bench rows use), as mean / std / worst-case over trials.
+
+Trial ``t`` re-seeds the model with ``seed0 + t`` — same physics, fresh
+draw — so any (engine, lowering, machine) reproduces the same sweep
+bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cim import CIMSpec
+from repro.core.engine import CIMEngine, PallasEngine
+from repro.core.variation import VARIATION_PRESETS, VariationModel
+
+__all__ = ["TrialStats", "RobustnessReport", "monte_carlo_sweep",
+           "sweep_presets", "build_robust_sim"]
+
+
+@dataclass(frozen=True)
+class TrialStats:
+    """mean / std / worst-case of a per-trial metric."""
+
+    mean: float
+    std: float
+    worst: float
+
+    @classmethod
+    def of(cls, values: Sequence[float]) -> "TrialStats":
+        v = np.asarray(values, np.float64)
+        return cls(mean=float(v.mean()), std=float(v.std()),
+                   worst=float(v.min()))
+
+
+@dataclass
+class RobustnessReport:
+    """One model x one variation corner, over ``trials`` seeded draws."""
+
+    model: str
+    engine: str
+    variation: VariationModel
+    trials: int
+    batch: int
+    #: nominal quantized run vs the float32 forward (no variation)
+    nominal_agree: float
+    #: per-trial top-1 agreement vs the NOMINAL quantized run
+    agree: TrialStats
+    #: per-trial top-1 agreement vs the float32 reference
+    agree_float: TrialStats
+    #: zero-magnitude model ran bitwise-equal to the nominal engine
+    #: (None = check skipped)
+    zero_var_bitwise: Optional[bool] = None
+    per_trial: List[float] = field(default_factory=list, repr=False)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "model": self.model, "engine": self.engine,
+            "variation": self.variation.describe(),
+            "trials": self.trials, "batch": self.batch,
+            "nominal_agree": self.nominal_agree,
+            "agree_mean": self.agree.mean, "agree_std": self.agree.std,
+            "agree_worst": self.agree.worst,
+            "agree_float_mean": self.agree_float.mean,
+            "agree_float_worst": self.agree_float.worst,
+            "zero_var_bitwise": self.zero_var_bitwise,
+        }
+
+
+def _make_engine(engine: str, spec: Optional[CIMSpec],
+                 layer_specs: Optional[Dict[str, object]] = None,
+                 clip_overrides: Optional[Dict[str, float]] = None):
+    cls = {"cim": CIMEngine, "pallas": PallasEngine}.get(engine)
+    if cls is None:
+        raise ValueError(
+            f"robustness sweeps need a quantized engine (cim/pallas), "
+            f"not {engine!r}")
+    eng = cls(spec) if spec is not None else cls()
+    for name, sp in (layer_specs or {}).items():
+        if isinstance(sp, CIMSpec):
+            eng.set_layer_spec(name, w_bits=sp.w_bits, a_bits=sp.a_bits,
+                               adc_bits=sp.adc_bits)
+        else:  # a (w_bits, a_bits, adc_bits) triple
+            w, a, adc = sp
+            eng.set_layer_spec(name, w_bits=w, a_bits=a, adc_bits=adc)
+    for name, cp in (clip_overrides or {}).items():
+        eng.set_layer_spec(name, clip_percentile=cp)
+    return eng
+
+
+def build_robust_sim(cnn, params: Dict[str, np.ndarray],
+                     images: np.ndarray, *, engine: str = "cim",
+                     spec: Optional[CIMSpec] = None,
+                     layer_specs: Optional[Dict[str, object]] = None,
+                     clip_overrides: Optional[Dict[str, float]] = None,
+                     calib_images: Optional[np.ndarray] = None):
+    """One trace-backend quantized simulator, calibrated on the sweep's
+    own images by default — build once, sweep many corners against it."""
+    from repro.core.network import NetworkSimulator
+
+    eng = _make_engine(engine, spec, layer_specs, clip_overrides)
+    return NetworkSimulator(
+        cnn, params, backend="trace", engine=eng,
+        calib_images=images if calib_images is None else calib_images)
+
+
+def _float_reference(cnn, params, images) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.models.cnn import cnn_forward
+
+    p32 = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+    return np.asarray(cnn_forward(p32, jnp.asarray(images, jnp.float32),
+                                  cnn))
+
+
+def monte_carlo_sweep(cnn, params: Dict[str, np.ndarray],
+                      images: np.ndarray, variation: VariationModel,
+                      trials: int = 20, *, engine: str = "cim",
+                      spec: Optional[CIMSpec] = None,
+                      layer_specs: Optional[Dict[str, object]] = None,
+                      clip_overrides: Optional[Dict[str, float]] = None,
+                      seed0: Optional[int] = None,
+                      check_zero: bool = True,
+                      calib_images: Optional[np.ndarray] = None,
+                      sim=None,
+                      ref_logits: Optional[np.ndarray] = None
+                      ) -> RobustnessReport:
+    """Seeded Monte-Carlo sweep of ``variation`` over ``trials`` draws.
+
+    ``sim`` may be a prebuilt quantized trace simulator (from
+    :func:`build_robust_sim`) to amortize calibration across corners;
+    its variation model is restored to ``None`` on exit either way.
+    ``ref_logits`` short-circuits the float32 reference forward.
+    """
+    if trials < 1:
+        raise ValueError(f"trials must be >= 1: {trials}")
+    if sim is None:
+        sim = build_robust_sim(cnn, params, images, engine=engine,
+                               spec=spec, layer_specs=layer_specs,
+                               clip_overrides=clip_overrides,
+                               calib_images=calib_images)
+    if ref_logits is None:
+        ref_logits = _float_reference(cnn, params, images)
+    top1_f = np.argmax(ref_logits, axis=-1)
+    seed0 = variation.seed if seed0 is None else int(seed0)
+
+    try:
+        nominal = sim.run(images).logits
+        top1_n = np.argmax(nominal, axis=-1)
+        nominal_agree = float(np.mean(top1_n == top1_f))
+
+        zero_ok: Optional[bool] = None
+        if check_zero:
+            sim.set_variation(VariationModel(seed=seed0))
+            zero_ok = bool(np.array_equal(sim.run(images).logits, nominal))
+
+        agree_n: List[float] = []
+        agree_f: List[float] = []
+        for t in range(trials):
+            sim.set_variation(variation.reseed(seed0 + t))
+            top1 = np.argmax(sim.run(images).logits, axis=-1)
+            agree_n.append(float(np.mean(top1 == top1_n)))
+            agree_f.append(float(np.mean(top1 == top1_f)))
+    finally:
+        sim.set_variation(None)
+
+    return RobustnessReport(
+        model=cnn.name, engine=sim.pe_engine.name,
+        variation=variation, trials=trials, batch=int(len(images)),
+        nominal_agree=nominal_agree,
+        agree=TrialStats.of(agree_n), agree_float=TrialStats.of(agree_f),
+        zero_var_bitwise=zero_ok, per_trial=agree_n)
+
+
+def sweep_presets(cnn, params: Dict[str, np.ndarray], images: np.ndarray,
+                  presets: Optional[Sequence[str]] = None,
+                  trials: int = 20, *, engine: str = "cim",
+                  spec: Optional[CIMSpec] = None,
+                  seed0: int = 0
+                  ) -> Dict[str, RobustnessReport]:
+    """Sweep the named variation corners (default: all of
+    ``VARIATION_PRESETS``) against ONE shared simulator build — the
+    README / bench table in one call."""
+    names: Tuple[str, ...] = tuple(presets) if presets is not None \
+        else tuple(VARIATION_PRESETS)
+    sim = build_robust_sim(cnn, params, images, engine=engine, spec=spec)
+    ref = _float_reference(cnn, params, images)
+    out: Dict[str, RobustnessReport] = {}
+    for i, name in enumerate(names):
+        out[name] = monte_carlo_sweep(
+            cnn, params, images, VARIATION_PRESETS[name], trials,
+            seed0=seed0, check_zero=(i == 0), sim=sim, ref_logits=ref)
+    return out

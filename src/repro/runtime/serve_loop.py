@@ -270,6 +270,10 @@ class StreamServeReport:
     throughput_inf_s: float           # measured completion rate
     clock_hz: float
     latency_hist: Tuple[np.ndarray, np.ndarray] = field(repr=False)
+    #: frames the StragglerMonitor flagged (> threshold x EWMA latency)
+    flagged_frames: Tuple[int, ...] = ()
+    #: monitor tripped ``trip_limit`` consecutive flags: reshard advised
+    straggler_escalate: bool = False
 
     @property
     def latency_s(self) -> np.ndarray:
@@ -309,7 +313,9 @@ def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
 def serve_stream(sim, frames: np.ndarray,
                  offered_inf_s: Optional[float] = None,
                  clock_hz: Optional[float] = None,
-                 hist_bins: int = 16) -> StreamServeReport:
+                 hist_bins: int = 16,
+                 straggler: Optional["StragglerMonitor"] = None
+                 ) -> StreamServeReport:
     """Request-queue front-end over the streaming simulator.
 
     ``sim`` is a ``NetworkSimulator(..., backend="trace",
@@ -320,8 +326,17 @@ def serve_stream(sim, frames: np.ndarray,
     so any measured latency growth is queueing delay the pipeline could
     not hide.  Each request's closed-loop latency is measured from its
     arrival cycle to its pipeline exit in the simulated stage timeline.
+
+    The per-frame latencies feed a :class:`StragglerMonitor`
+    (``runtime/fault.py``; pass ``straggler=`` to tune or share one
+    across calls): frames whose closed-loop latency exceeds
+    ``threshold`` x the EWMA baseline are flagged in
+    ``report.flagged_frames``, and ``trip_limit`` consecutive flags set
+    ``report.straggler_escalate`` — a queue drifting past the pipeline's
+    steady state, the serving-side analogue of a slow pod member.
     """
     from repro.core.energy import STEP_CLOCK_HZ
+    from repro.runtime.fault import StragglerMonitor
 
     if clock_hz is None:
         clock_hz = STEP_CLOCK_HZ
@@ -338,12 +353,18 @@ def serve_stream(sim, frames: np.ndarray,
     span = int(exits[-1] - exits[0])
     throughput = (clock_hz * (t_n - 1) / span) if span > 0 else float("inf")
     counts, edges = np.histogram(lat, bins=hist_bins)
+    mon = StragglerMonitor() if straggler is None else straggler
+    escalate = False
+    for i, cycles in enumerate(lat):
+        escalate = mon.observe(i, float(cycles) / clock_hz) or escalate
     return StreamServeReport(
         arrivals=arrivals, latency_cycles=lat,
         measured_ii=res.measured_ii, analytic_ii=res.analytic_ii,
         fill_latency=res.fill_latency,
         offered_inf_s=clock_hz / spacing, throughput_inf_s=throughput,
-        clock_hz=clock_hz, latency_hist=(counts, edges))
+        clock_hz=clock_hz, latency_hist=(counts, edges),
+        flagged_frames=tuple(mon.flagged_steps),
+        straggler_escalate=escalate)
 
 
 def greedy_generate(serve: ServeProgram, params, batch_in, steps: int):

@@ -289,3 +289,130 @@ def test_mapping_config_hash_and_describe():
     b = MappingConfig(strategy="hilbert", dup_overrides=(("c0", 2),))
     assert a == b and hash(a) == hash(b)
     assert "hilbert" in a.describe() and "c0:2" in a.describe()
+
+
+# ---------------------------------------------------------------------------
+# Robustness DSE: precision axes, accuracy memoization, the robust flow
+# ---------------------------------------------------------------------------
+
+
+def test_precision_axes_enumerate_and_mutate():
+    import random
+
+    from repro.dse.space import layer_specs_for
+
+    cnn = _toy_cnn()
+    space = DesignSpace(cnn, aspects=(1.0,), reuses=(1,), bands=(2,),
+                        base_bits_choices=((8, 8, 8), (6, 6, 4)),
+                        layer_bits_choices=((4, 4, 4),))
+    cfgs = list(space.configs())
+    assert space.size == len(cfgs)
+    assert {c.base_bits for c in cfgs} == {(8, 8, 8), (6, 6, 4)}
+    # mutate eventually toggles both precision knobs
+    rng = random.Random(0)
+    cfg = MappingConfig()
+    seen_layer_bits = seen_base = False
+    for _ in range(200):
+        cfg2 = space.mutate(cfg, rng)
+        seen_base = seen_base or cfg2.base_bits != cfg.base_bits
+        seen_layer_bits = seen_layer_bits or cfg2.precision != cfg.precision
+        cfg = cfg2
+    assert seen_base and seen_layer_bits
+    # precision_key ignores mapping knobs, sees precision knobs
+    a = MappingConfig(strategy="hilbert", base_bits=(6, 6, 4))
+    assert a.precision_key == MappingConfig(base_bits=(6, 6, 4)).precision_key
+    assert a.precision_key != MappingConfig().precision_key
+    # layer_specs_for realizes base + overrides
+    from repro.core.cim import DEFAULT_SPEC
+    cfg = MappingConfig(base_bits=(6, 6, 4), precision=(("c1", (4, 4, 4)),))
+    ls = layer_specs_for(cfg, DEFAULT_SPEC, ("c0", "c1"))
+    assert (ls["c0"].w_bits, ls["c0"].a_bits, ls["c0"].adc_bits) == (6, 6, 4)
+    assert (ls["c1"].w_bits, ls["c1"].a_bits, ls["c1"].adc_bits) == (4, 4, 4)
+    assert ls["c0"].n_c == DEFAULT_SPEC.n_c
+    desc = cfg.describe()
+    assert "w6a6adc4" in desc and "c1:w4a4adc4" in desc
+
+
+def test_accuracy_fn_memoized_per_precision_key():
+    """Accuracy depends only on the precision point — the expensive
+    Monte-Carlo callback must run once per distinct key, not once per
+    candidate."""
+    from repro.core.cim import DEFAULT_SPEC
+
+    cnn = _toy_cnn()
+    space = DesignSpace(cnn, strategy_names=("snake", "hilbert"),
+                        aspects=(1.0,), reuses=(1, 2), bands=(2,),
+                        base_bits_choices=((8, 8, 8), (6, 6, 4)))
+    calls = []
+
+    def accuracy_fn(cfg):
+        calls.append(cfg.precision_key)
+        return 1.0, 0.5 if cfg.base_bits == (8, 8, 8) else 0.25
+
+    res = search(cnn, space, budget=space.size + 1, cim_spec=DEFAULT_SPEC,
+                 accuracy_fn=accuracy_fn)
+    assert res.mode == "exhaustive"
+    assert len(calls) == len(set(calls)) == 2    # one call per key
+    assert all(c.score.acc_nominal == 1.0 for c in res.candidates)
+    # quantized energy reflects the per-layer bits: the low-precision
+    # configs score strictly higher TOPS/W than nominal at equal mapping
+    by_bits = {}
+    for c in res.candidates:
+        by_bits.setdefault(c.config.base_bits, []).append(c)
+    pairs = 0
+    for lo in by_bits.get((6, 6, 4), []):
+        for hi in by_bits[(8, 8, 8)]:
+            if (lo.config.strategy, lo.config.reuse) \
+                    == (hi.config.strategy, hi.config.reuse):
+                assert lo.score.tops_per_w > hi.score.tops_per_w
+                pairs += 1
+    assert pairs > 0
+
+
+def test_robust_axes_front_uses_accuracy():
+    from repro.dse.report import ROBUST_AXES
+
+    a = Score(tops_per_w=20.0, inf_per_s=1e5, tiles=100,
+              max_link_bytes=1.0, total_byte_hops=1.0, energy_uj=1.0,
+              acc_nominal=1.0, acc_noisy=0.9)
+    b = Score(tops_per_w=25.0, inf_per_s=1e5, tiles=100,
+              max_link_bytes=1.0, total_byte_hops=1.0, energy_uj=1.0,
+              acc_nominal=1.0, acc_noisy=0.6)
+    c = Score(tops_per_w=19.0, inf_per_s=1e5, tiles=100,
+              max_link_bytes=1.0, total_byte_hops=1.0, energy_uj=1.0,
+              acc_nominal=1.0, acc_noisy=0.8)
+    front = pareto_front([a, b, c], key=lambda s: s, axes=ROBUST_AXES)
+    assert front == [a, b]                       # c: dominated by a
+
+
+@pytest.mark.slow
+def test_run_robust_dse_smoke():
+    """The end-to-end robust flow on vgg11: zero-variation bitwise
+    check passes, the front carries live accuracy and precision axes,
+    and the markdown renders."""
+    from repro.dse.report import (
+        ROBUST_AXES,
+        robust_to_markdown,
+        run_robust_dse,
+    )
+
+    def tiny(cnn):
+        return DesignSpace(cnn, strategy_names=("snake", "hilbert"),
+                           aspects=(1.0,), reuses=(1,), dup_caps=(64,),
+                           base_bits_choices=((8, 8, 8), (6, 6, 6)),
+                           layer_bits_choices=((6, 6, 4),))
+
+    reps = run_robust_dse(models=("vgg11-cifar10",), budget=6, seed=0,
+                          trials=2, batch=2, space_factory=tiny)
+    rep = reps[0]
+    assert rep.zero_var_bitwise is True
+    assert rep.front, "empty robust Pareto front"
+    for cand in rep.front:
+        assert np.isfinite(cand.score.acc_noisy)
+        assert np.isfinite(cand.score.acc_nominal)
+    keys = {c.config.precision_key for c in rep.result.candidates}
+    assert len(keys) >= 3          # nominal + low base_bits + probes
+    assert any(c.config.precision for c in rep.result.candidates)
+    md = robust_to_markdown(reps)
+    assert "vgg11-cifar10" in md and "top-1 noisy" in md
+    assert [a for a, _ in ROBUST_AXES].count("acc_noisy") == 1

@@ -1,0 +1,195 @@
+"""The fault-tolerance policy layer (``runtime/fault.py``) and its
+serving-side hookup: StragglerMonitor's EWMA baseline and trip-limit
+escalation, StepGuard's backoff / recovery ordering and exception
+narrowing (device faults retry; cancels and programming errors
+propagate immediately), and serve_stream's per-frame straggler report.
+"""
+import numpy as np
+import pytest
+from conftest import int_params as _int_params
+
+from repro.runtime.fault import RETRYABLE_FAULTS, StepGuard, StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_baseline_not_poisoned_by_slow_steps():
+    """Flagged steps must NOT enter the EWMA: after a burst of 10x
+    stragglers the baseline still reflects the healthy steps, so the
+    next healthy step is not itself misflagged against an inflated
+    mean (the failure mode of a naive running average)."""
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, trip_limit=100)
+    mon.observe(0, 1.0)          # seeds the baseline
+    mon.observe(1, 1.0)
+    base = mon.mean_s
+    for s in range(2, 4):
+        assert mon.observe(s, 10.0) is False  # flagged, below trip limit
+    assert mon.mean_s == base    # stragglers never touched the EWMA
+    assert mon.flagged_steps == [2, 3]
+    assert mon.observe(4, 1.0) is False
+    assert mon.trips == 0        # healthy step resets the trip counter
+
+
+def test_straggler_trip_limit_escalates_only_on_consecutive_flags():
+    mon = StragglerMonitor(alpha=0.1, threshold=2.0, trip_limit=3)
+    mon.observe(0, 1.0)
+    assert mon.observe(1, 5.0) is False
+    assert mon.observe(2, 5.0) is False
+    assert mon.observe(3, 5.0) is True       # third consecutive: escalate
+    mon2 = StragglerMonitor(alpha=0.1, threshold=2.0, trip_limit=3)
+    mon2.observe(0, 1.0)
+    mon2.observe(1, 5.0)
+    mon2.observe(2, 1.0)                     # healthy step breaks the run
+    assert mon2.observe(3, 5.0) is False
+    assert mon2.observe(4, 5.0) is False
+
+
+def test_straggler_ewma_tracks_healthy_drift():
+    """Healthy steps move the baseline at rate alpha (the monitor must
+    adapt to genuine slowdowns, e.g. a longer phase of training)."""
+    mon = StragglerMonitor(alpha=0.5, threshold=10.0)
+    mon.observe(0, 1.0)
+    mon.observe(1, 2.0)
+    assert mon.mean_s == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# StepGuard
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def no_sleep(monkeypatch):
+    """Capture backoff sleeps instead of waiting them out."""
+    slept = []
+    monkeypatch.setattr("repro.runtime.fault.time.sleep", slept.append)
+    return slept
+
+
+def test_stepguard_backoff_sequence_and_recovery_ordering(monkeypatch):
+    """On each failure the guard (1) sleeps the doubling backoff, then
+    (2) recovers to the last committed step — in that order — and
+    replays; the first success returns."""
+    events = []
+    calls = {"n": 0}
+    monkeypatch.setattr("repro.runtime.fault.time.sleep",
+                        lambda s: events.append(("sleep", s)))
+
+    def step_fn(x):
+        calls["n"] += 1
+        events.append(("step", calls["n"]))
+        if calls["n"] < 3:
+            raise RuntimeError("ICI timeout")
+        return x + 1
+
+    guard = StepGuard(recover=lambda s: events.append(("recover", s)),
+                      max_retries=3, backoff_s=1.0)
+    assert guard.run(step_fn, 7, 41) == 42
+    assert guard.failures == 2
+    assert events == [("step", 1), ("sleep", 1.0), ("recover", 6),
+                      ("step", 2), ("sleep", 2.0), ("recover", 6),
+                      ("step", 3)]
+
+
+def test_stepguard_reraises_after_max_retries(no_sleep):
+    recovered = []
+    guard = StepGuard(recover=recovered.append, max_retries=2,
+                      backoff_s=0.5)
+
+    def always_fail():
+        raise RuntimeError("halted collective")
+
+    with pytest.raises(RuntimeError, match="halted collective"):
+        guard.run(always_fail, 5)
+    assert guard.failures == 3               # initial try + 2 retries
+    assert no_sleep == [0.5, 1.0]            # no sleep after the last raise
+    assert recovered == [4, 4]               # no recovery after final fail
+
+
+@pytest.mark.parametrize("exc", [KeyboardInterrupt, SystemExit])
+def test_stepguard_never_swallows_cancellation(no_sleep, exc):
+    """Ctrl-C / sys.exit must escape on the FIRST occurrence — no
+    backoff, no recovery, no retry (the old ``except Exception`` got
+    this right only by accident of the exception hierarchy; this pins
+    it against a future over-broad handler)."""
+    recovered = []
+    guard = StepGuard(recover=recovered.append, max_retries=3)
+    calls = {"n": 0}
+
+    def cancelled():
+        calls["n"] += 1
+        raise exc()
+
+    with pytest.raises(exc):
+        guard.run(cancelled, 3)
+    assert calls["n"] == 1
+    assert guard.failures == 0
+    assert no_sleep == [] and recovered == []
+
+
+def test_stepguard_programming_errors_propagate_immediately(no_sleep):
+    """ValueError/TypeError are bugs, not device faults — retrying them
+    burns the backoff ladder for nothing."""
+    guard = StepGuard(recover=lambda s: None, max_retries=3)
+    calls = {"n": 0}
+
+    def buggy():
+        calls["n"] += 1
+        raise ValueError("shape mismatch")
+
+    with pytest.raises(ValueError):
+        guard.run(buggy, 3)
+    assert calls["n"] == 1 and guard.failures == 0 and no_sleep == []
+
+
+def test_stepguard_retries_oserror_and_custom_faults(no_sleep):
+    """OSError (pod/file flakiness) is retryable by default, and the
+    retryable set is per-guard tunable."""
+    assert RuntimeError in RETRYABLE_FAULTS and OSError in RETRYABLE_FAULTS
+    guard = StepGuard(recover=lambda s: None, max_retries=1)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ConnectionError("peer dropped")  # an OSError subclass
+        return "ok"
+
+    assert guard.run(flaky, 1) == "ok"
+    narrow = StepGuard(recover=lambda s: None, max_retries=3,
+                       retryable=(KeyError,))
+    with pytest.raises(RuntimeError):
+        narrow.run(lambda: (_ for _ in ()).throw(RuntimeError("x")), 1)
+
+
+# ---------------------------------------------------------------------------
+# serve_stream straggler hookup
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stream_reports_straggler_fields():
+    """The streaming front-end feeds per-frame closed-loop latencies to
+    a StragglerMonitor: at the analytic offered rate the steady state is
+    flat, so nothing is flagged; a shared monitor with a sub-1.0
+    threshold flags every post-seed frame and escalates."""
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.runtime.serve_loop import build_stream_sim, serve_stream
+
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _int_params(cnn, rng)
+    frames = rng.random((6, 32, 32, 3))
+    sim = build_stream_sim(cnn, params)
+
+    rep = serve_stream(sim, frames)
+    assert rep.flagged_frames == ()
+    assert rep.straggler_escalate is False
+
+    tight = StragglerMonitor(threshold=0.5, trip_limit=2)
+    rep2 = serve_stream(sim, frames, straggler=tight)
+    assert rep2.flagged_frames == tuple(range(1, 6))
+    assert rep2.straggler_escalate is True
+    assert rep2.latency_cycles.tobytes() == rep.latency_cycles.tobytes()

@@ -1,0 +1,253 @@
+"""Device-variation injection (``core/variation.py``), its engine seam
+(``CIMEngine``/``PallasEngine`` variation wiring, per-layer specs and
+clip overrides), the simulator swap (``NetworkSimulator.set_variation``)
+and the Monte-Carlo robustness harness (``runtime/robustness.py``).
+
+The bitwise *lowering* invariants under variation live in
+``test_quant_trace.py``; this suite covers the model itself and the
+plumbing above the engines."""
+import numpy as np
+import pytest
+from conftest import int_params as _int_params
+
+from repro.configs.cnn import CNN_BENCHMARKS
+from repro.core.cim import CIMSpec, DEFAULT_SPEC, adc_convert
+from repro.core.engine import CIMEngine, PallasEngine, quantize_weight
+from repro.core.network import NetworkSimulator
+from repro.core.variation import VARIATION_PRESETS, VariationModel
+
+
+# ---------------------------------------------------------------------------
+# VariationModel: determinism, physics, null-detection
+# ---------------------------------------------------------------------------
+
+
+def test_perturb_weights_deterministic_and_stream_separated():
+    vm = VariationModel(seed=3, conductance_sigma=0.05, stuck_zero=0.02)
+    q = np.arange(-50, 50, dtype=np.float64).reshape(10, 10)
+    a = vm.perturb_weights("conv1", q, 127)
+    b = vm.perturb_weights("conv1", q, 127)
+    assert a.tobytes() == b.tobytes()        # same (seed, layer): same draw
+    c = vm.perturb_weights("conv2", q, 127)
+    assert a.tobytes() != c.tobytes()        # layer name decorrelates
+    d = vm.reseed(4).perturb_weights("conv1", q, 127)
+    assert a.tobytes() != d.tobytes()        # reseed decorrelates
+    assert vm.reseed(3).perturb_weights("conv1", q, 127).tobytes() \
+        == a.tobytes()                       # reseed(seed) is identity
+
+
+def test_perturb_weights_stuck_fractions_and_range():
+    vm = VariationModel(seed=0, stuck_zero=0.25, stuck_one=0.1)
+    q = np.full((400, 400), 17.0)
+    out = vm.perturb_weights("fc", q, 127)
+    frac0 = float(np.mean(out == 0.0))
+    frac1 = float(np.mean(out == 127.0))
+    assert frac0 == pytest.approx(0.25, abs=0.01)
+    assert frac1 == pytest.approx(0.10, abs=0.01)
+    assert float(np.mean(out == 17.0)) == pytest.approx(0.65, abs=0.02)
+    noisy = VariationModel(seed=0, conductance_sigma=0.5).perturb_weights(
+        "fc", np.full((200, 200), 120.0), 127)
+    assert noisy.max() <= 127 and noisy.min() >= -128  # code-range clipped
+    assert noisy.dtype == np.float64
+
+
+def test_adc_params_shapes_and_null_components():
+    vm = VariationModel(seed=1, adc_offset_sigma=0.5, adc_gain_sigma=0.1)
+    inv, off = vm.adc_params("conv1", 7, 4.0)
+    assert inv.shape == (7,) and off.shape == (7,)
+    assert inv.dtype == np.float32 and off.dtype == np.float32
+    assert not np.allclose(inv, 4.0) and not np.allclose(off, 0.0)
+    gain_only = VariationModel(seed=1, adc_gain_sigma=0.1)
+    inv2, off2 = gain_only.adc_params("conv1", 7, 4.0)
+    assert np.array_equal(off2, np.zeros(7, np.float32))
+    assert inv2.tobytes() == inv.tobytes()   # same stream: same gain draw
+
+
+def test_flags_and_presets():
+    assert VariationModel().is_null
+    assert not VariationModel().has_weight and not VariationModel().has_adc
+    vm = VariationModel(conductance_sigma=0.01)
+    assert vm.has_weight and not vm.has_adc and not vm.is_null
+    vm = VariationModel(adc_gain_sigma=0.01)
+    assert vm.has_adc and not vm.has_weight
+    for name, preset in VARIATION_PRESETS.items():
+        assert not preset.is_null, name
+        assert name in ("noise", "stuck", "adc", "all")
+    assert VARIATION_PRESETS["all"].has_weight
+    assert VARIATION_PRESETS["all"].has_adc
+
+
+def test_adc_convert_offset_path_matches_manual():
+    d = np.array([[3.0, -17.0], [120.0, 5.0]])
+    base = adc_convert(d, 0.25, -128, 127)
+    assert base.tobytes() == adc_convert(d, 0.25, -128, 127, None).tobytes()
+    off = adc_convert(d, 0.25, -128, 127, 0.6)
+    ref = np.clip(np.round(d.astype(np.float32) * np.float32(0.25)
+                           + np.float32(0.6)), -128, 127).astype(np.float64)
+    assert off.tobytes() == ref.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Engine seam: per-layer specs, clip overrides, bit-scalable quantization
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_weight_bit_scalable_range():
+    w = np.random.default_rng(0).standard_normal((30, 8))
+    q4, s4 = quantize_weight(w, 4)
+    assert q4.min() >= -8 and q4.max() <= 7 and q4.max() == 7
+    q8, s8 = quantize_weight(w, 8)
+    assert q8.max() == 127
+    with pytest.raises(ValueError):
+        quantize_weight(w, 1)
+    with pytest.raises(ValueError):
+        quantize_weight(w, 9)
+
+
+def test_set_layer_spec_overrides_bits_and_clip():
+    eng = CIMEngine(DEFAULT_SPEC)
+    eng.set_layer_spec("conv1", w_bits=4, a_bits=6, adc_bits=5)
+    sp = eng._base_spec("conv1")
+    assert (sp.w_bits, sp.a_bits, sp.adc_bits) == (4, 6, 5)
+    assert eng._base_spec("conv2") is eng.spec   # others untouched
+    eng.set_layer_spec("conv1", adc_bits=7)      # partial update composes
+    sp = eng._base_spec("conv1")
+    assert (sp.w_bits, sp.a_bits, sp.adc_bits) == (4, 6, 7)
+    eng.set_layer_spec("conv1", clip_percentile=99.0)
+    assert eng.clip_overrides["conv1"] == 99.0
+    with pytest.raises(ValueError):
+        eng.set_layer_spec("conv1", clip_percentile=0.0)
+
+
+def test_clip_override_changes_calibration():
+    """Per-layer percentile clipping must actually move the calibrated
+    a_scale when the activation distribution has outliers."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(5000)
+    x[:5] = 80.0                                 # heavy outliers
+    w = rng.standard_normal((9, 4))
+    e_full = CIMEngine(DEFAULT_SPEC, use_calibrated_gain=False,
+                       clip_percentile=100.0)
+    e_full.calibrate_layer("l", x, w)
+    e_clip = CIMEngine(DEFAULT_SPEC, use_calibrated_gain=False,
+                       clip_percentile=100.0)
+    e_clip.set_layer_spec("l", clip_percentile=99.0)
+    e_clip.calibrate_layer("l", x, w)
+    assert e_clip.calib["l"].a_scale < e_full.calib["l"].a_scale
+
+
+@pytest.mark.parametrize("engine_cls", [CIMEngine, PallasEngine])
+def test_per_layer_w_bits_requantizes_weights(engine_cls):
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((2, 2, 3, 4))
+    from repro.core.engine import conv_tile_slices
+    from repro.core.schedule import compile_conv_block
+    sched = compile_conv_block("lay", 6, 6, 3, 4, 2, 1, 0)
+    tiles = conv_tile_slices(sched)
+    eng = engine_cls(DEFAULT_SPEC)
+    eng.set_layer_spec("lay", w_bits=3)
+    eng.set_layer("lay", a_scale=0.1)
+    h = eng.conv_handle("lay", w, tiles)
+    tw = np.concatenate([t.ravel() for t in h.tile_w])
+    assert tw.max() <= 3 and tw.min() >= -4      # 3-bit code range
+    assert tw.max() == 3                         # scale actually used
+
+
+# ---------------------------------------------------------------------------
+# NetworkSimulator.set_variation + Monte-Carlo harness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def vgg11_setup():
+    rng = np.random.default_rng(11)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = {k: v * 0.1 for k, v in _int_params(cnn, rng).items()}
+    frames = rng.random((2, 32, 32, 3))
+    return cnn, params, frames
+
+
+def test_set_variation_swap_and_restore_bitwise(vgg11_setup):
+    """Injecting then clearing a variation model must restore the exact
+    nominal codes — handle rebuild is the only state, nothing leaks —
+    including under the jitted trace flavor."""
+    cnn, params, frames = vgg11_setup
+    sim = NetworkSimulator(cnn, params, backend="trace", engine="cim",
+                           trace_jit=True, calib_images=frames[:1])
+    nominal = sim.run(frames).logits
+    sim.set_variation(VARIATION_PRESETS["all"])
+    noisy = sim.run(frames).logits
+    assert nominal.tobytes() != noisy.tobytes()
+    sim.set_variation(None)
+    assert sim.run(frames).logits.tobytes() == nominal.tobytes()
+
+
+def test_set_variation_rejects_exact_engine(vgg11_setup):
+    cnn, params, frames = vgg11_setup
+    sim = NetworkSimulator(cnn, params, backend="trace", engine="exact")
+    with pytest.raises(ValueError, match="variation"):
+        sim.set_variation(VARIATION_PRESETS["noise"])
+
+
+def test_monte_carlo_sweep_deterministic(vgg11_setup):
+    from repro.runtime.robustness import build_robust_sim, monte_carlo_sweep
+    cnn, params, frames = vgg11_setup
+    sim = build_robust_sim(cnn, params, frames)
+    kw = dict(trials=2, seed0=5, sim=sim)
+    r1 = monte_carlo_sweep(cnn, params, frames,
+                           VARIATION_PRESETS["all"], **kw)
+    r2 = monte_carlo_sweep(cnn, params, frames,
+                           VARIATION_PRESETS["all"], **kw)
+    assert r1.zero_var_bitwise is True
+    assert r1.per_trial == r2.per_trial          # seeded: reproducible
+    assert r1.agree.worst <= r1.agree.mean <= 1.0
+    assert r1.trials == 2 and r1.batch == 2
+    row = r1.row()
+    assert row["model"] == cnn.name and row["zero_var_bitwise"] is True
+
+
+def test_sweep_presets_shares_sim(vgg11_setup):
+    from repro.runtime.robustness import sweep_presets
+    cnn, params, frames = vgg11_setup
+    out = sweep_presets(cnn, params, frames, presets=("noise", "adc"),
+                        trials=1)
+    assert set(out) == {"noise", "adc"}
+    assert out["noise"].zero_var_bitwise is True   # checked on first only
+    assert out["adc"].zero_var_bitwise is None
+    # both corners share one simulator: same nominal reference
+    assert out["noise"].nominal_agree == out["adc"].nominal_agree
+
+
+def test_monte_carlo_rejects_bad_args(vgg11_setup):
+    from repro.runtime.robustness import monte_carlo_sweep
+    cnn, params, frames = vgg11_setup
+    with pytest.raises(ValueError, match="trials"):
+        monte_carlo_sweep(cnn, params, frames,
+                          VARIATION_PRESETS["all"], trials=0)
+    from repro.runtime.robustness import _make_engine
+    with pytest.raises(ValueError, match="quantized engine"):
+        _make_engine("exact", None)
+
+
+def test_energy_layer_specs_scales_adc_and_input():
+    """The per-layer energy path: lower adc_bits cuts ADC energy
+    (exponential in bits), lower a_bits cuts array/input energy
+    (linear); the aggregate path is untouched when layer_specs=None."""
+    from repro.core.energy import analyze_plan
+    from repro.core.mapping import plan_network
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    plan = plan_network(cnn)
+    base = analyze_plan(cnn, plan, cim_spec=DEFAULT_SPEC)
+    names = [l.name for l in cnn.layers]
+    same = analyze_plan(cnn, plan, cim_spec=DEFAULT_SPEC,
+                        layer_specs={n: DEFAULT_SPEC for n in names})
+    assert same.e_cim_adc == pytest.approx(base.e_cim_adc)
+    assert same.e_cim_array == pytest.approx(base.e_cim_array)
+    low = {n: CIMSpec(n_c=DEFAULT_SPEC.n_c, adc_bits=4,
+                      gain=DEFAULT_SPEC.gain, w_bits=8, a_bits=4)
+           for n in names}
+    cheap = analyze_plan(cnn, plan, cim_spec=DEFAULT_SPEC, layer_specs=low)
+    assert cheap.e_cim_adc < base.e_cim_adc
+    assert cheap.e_cim_array == pytest.approx(base.e_cim_array / 2)
+    with pytest.raises(ValueError, match="cim_spec"):
+        analyze_plan(cnn, plan, layer_specs=low)
