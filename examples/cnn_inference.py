@@ -67,9 +67,21 @@ def main():
                          "implies --engine cim if --engine is exact)")
     ap.add_argument("--trials", type=int, default=5,
                     help="Monte-Carlo draws for --variation")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace (host spans: calibration / "
+                         "trace lowering / jit; plus the stage x frame "
+                         "pipeline timeline when --streaming) — open in "
+                         "https://ui.perfetto.dev")
     args = ap.parse_args()
     if args.variation and args.engine == "exact":
         args.engine = "cim"
+    prof = None
+    timeline_events = []
+    if args.trace_out:
+        from repro.telemetry.spans import Profiler
+
+        prof = Profiler()
+        prof.install()
     cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
 
     # 1) map the network onto tiles (Fig. 7 machinery)
@@ -218,6 +230,12 @@ def main():
               f"({rep.offered_inf_s:.3g} req/s): latency p50/p99 = "
               f"{pct['p50']:.0f}/{pct['p99']:.0f} cycles, measured "
               f"throughput {rep.throughput_inf_s:.3g} inf/s")
+        if prof is not None:
+            from repro.telemetry.spans import stream_timeline_events
+
+            stage_names = [cnn.layers[st.li].name
+                           for st in stream_sim._stages]
+            timeline_events = stream_timeline_events(sres, stage_names)
 
     # 7) optional: the same network under an injected DSE placement —
     # identical logits (bitwise), shorter routes (snake prints the
@@ -242,6 +260,15 @@ def main():
               f"({100 * (opt_total / base_total - 1):+.1f}%), "
               "per class: " + ", ".join(
                   f"{k}={v}" for k, v in sorted(opt.traffic.byte_hops.items())))
+
+    if prof is not None:
+        from repro.telemetry.spans import write_chrome_trace
+
+        prof.uninstall()
+        write_chrome_trace(args.trace_out, prof.events + timeline_events)
+        print(f"wrote {args.trace_out}: "
+              f"{len(prof.events) + len(timeline_events)} trace events — "
+              "open in https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -32,3 +32,10 @@ python -m benchmarks.run --cim-smoke
 # engine or the seeded trial accuracies drift from the committed
 # FAULT_SMOKE_REF reference
 python -m benchmarks.run --fault-smoke
+# bounded telemetry smoke: vgg11 per-link heatmap + Chrome trace; exits
+# non-zero on a heatmap-vs-counters-vs-analytic conservation mismatch
+# (exact integers), invalid trace JSON, or any bitwise logits change
+# with a recorder attached.  Refreshes the committed reference trace;
+# the telemetry-off overhead itself is gated by --check-regress above
+# (network_sim_vgg11_b4_trace runs with telemetry disabled).
+python -m benchmarks.run --telemetry-smoke --trace-out results/vgg11_trace.json

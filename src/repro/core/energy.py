@@ -21,11 +21,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict
 
-from repro.configs.cnn import CNNConfig
+from repro.configs.cnn import CNNConfig, ConvLayer
 from repro.core.cim import CIMSpec  # noqa: F401  (annotation: analyze(cim_spec=))
 from repro.core.mapping import NetworkPlan, plan_network
 from repro.core.noc import Placement, inter_block_byte_hops, place_network
-from repro.core.transport import CHAIN, GROUP, conv_block_byte_hops
+from repro.core.transport import (CHAIN, GROUP, OFM, RESIDUAL, SPLIT,
+                                  conv_block_byte_hops, conv_links)
 
 # --- Tab. 3 component energies (45 nm, 1 V) --------------------------------
 E_MAC = 48.1e-15              # J per 8b MAC in the PE (crossbar+ADC+integ.)
@@ -109,6 +110,11 @@ class EnergyReport:
     e_cim_input: float = 0.0    # DAC / bit-serial input driving
     e_cim_adc: float = 0.0      # SAR conversions, scales with adc_bits
     n_adc_conversions: int = 0
+    # exact-integer per-class routed byte-hops of the *functional*
+    # execution (see routed_byte_hops_per_class); matches the simulator's
+    # TrafficCounters and the telemetry link heatmaps to the byte.  The
+    # e_moving term keeps its own (all-copies) accounting above.
+    routed_byte_hops: Dict[str, int] = field(default_factory=dict)
 
     @property
     def e_total(self) -> float:
@@ -285,7 +291,116 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
     # inter-block OFM movement (snake placement, usually 1 hop)
     rep.e_moving += inter_block_byte_hops(plan, placement=placement) \
         * E_LINK_BYTE_HOP
+    rep.routed_byte_hops = routed_byte_hops_per_class(cnn, plan, placement)
     return rep
+
+
+def _sim_stages(cnn: CNNConfig):
+    """Replicate the functional simulator's stage walk
+    (``NetworkSimulator._build_stages``): projection ``*_sc`` layers are
+    folded into the residual stage they serve.  Yields
+    ``(li, sc_li_or_None, prev_main_li_or_None)`` per stage."""
+    layers = cnn.layers
+    prev_li = None
+    li = 0
+    while li < len(layers):
+        layer = layers[li]
+        step = 1
+        sc_li = None
+        if isinstance(layer, ConvLayer) and layer.residual_from is not None \
+                and li + 1 < len(layers) \
+                and isinstance(layers[li + 1], ConvLayer) \
+                and layers[li + 1].name.endswith("_sc"):
+            sc_li = li + 1
+            step = 2
+        yield li, sc_li, prev_li
+        prev_li = li
+        li += step
+
+
+def routed_byte_hops_per_class(cnn: CNNConfig, plan: NetworkPlan,
+                               placement: "Placement | None" = None
+                               ) -> Dict[str, int]:
+    """Exact-integer per-class byte-hops of the *functional* execution.
+
+    The energy model's ``e_moving`` spreads output pixels over all
+    weight-duplicated copies at their own placed bases (fractional fires
+    per copy) — the right average-power view, but not what the
+    instruction-driven simulator routes: it drives copy 0 with the full
+    pixel stream and the full ``c_out`` psum payload.  This walk mirrors
+    the simulator's accounting exactly — same links
+    (:func:`conv_links` / the FC grid of ``simulate_fc``), same bases
+    (``block_start``), same payloads, same stage-folding for projection
+    shortcuts — so its totals equal ``TrafficCounters.byte_hops`` (and
+    therefore the telemetry per-link heatmap sums) as integers, on any
+    placement.  This is the analytic corner of the three-way
+    conservation check in ``repro.telemetry.heatmap``.
+    """
+    if placement is None:
+        placement = place_network(plan)
+    noc = placement.noc
+    out: Dict[str, int] = {CHAIN: 0, GROUP: 0, SPLIT: 0, OFM: 0, RESIDUAL: 0}
+
+    def conv_chain(li: int) -> None:
+        lp = plan.layers[li]
+        base = placement.block_start[li]
+        payload = lp.c_out * PSUM_BYTES
+        for s, d, kind in conv_links(lp.k, lp.chain_len // lp.k):
+            out[kind] += lp.out_pixels * noc.hops(base + s, base + d) \
+                * payload
+        # the IFM pixel stream stays analytic-only (energy model), as in
+        # the simulator's counters
+
+    def fc_grid(li: int) -> None:
+        lp = plan.layers[li]
+        base = placement.block_start[li]
+        m_t = lp.chain_len
+        m_a = math.ceil(lp.c_out / plan.n_m)
+        for j in range(m_a):
+            width = min(plan.n_m, lp.c_out - j * plan.n_m)
+            for i in range(m_t - 1):
+                out[SPLIT] += noc.hops(base + i * m_a + j,
+                                       base + (i + 1) * m_a + j) \
+                    * width * PSUM_BYTES
+
+    stages = list(_sim_stages(cnn))
+    saved: Dict[str, tuple] = {}
+    for li, sc_li, prev_li in stages:
+        layer = cnn.layers[li]
+        if not isinstance(layer, ConvLayer):
+            fc_grid(li)
+            continue
+        if layer.name.endswith("_a"):
+            # residual save: the stage input (the producing layer's
+            # post-pool activations) is what later streams to the join
+            saved[layer.name] = (layer.h * layer.w * layer.c, prev_li)
+        conv_chain(li)
+        if layer.residual_from is not None:
+            nbytes_saved, src_li = saved.pop(layer.residual_from)
+            lp = plan.layers[li]
+            if sc_li is not None:
+                conv_chain(sc_li)
+                lp_sc = plan.layers[sc_li]
+                if src_li is not None:
+                    out[RESIDUAL] += noc.hops(
+                        placement.block_end[src_li],
+                        placement.block_start[sc_li]) * nbytes_saved
+                out[RESIDUAL] += noc.hops(
+                    placement.block_end[sc_li],
+                    placement.block_end[li]) \
+                    * lp_sc.out_pixels * lp_sc.c_out
+            elif src_li is not None:
+                out[RESIDUAL] += noc.hops(
+                    placement.block_end[src_li],
+                    placement.block_end[li]) * nbytes_saved
+    # inter-stage OFM streams (the simulator records raw route lengths,
+    # no max(1, h) floor — co-located endpoints route zero hops)
+    for (li, _sc, _p), (nli, _sc2, _p2) in zip(stages, stages[1:]):
+        lp = plan.layers[li]
+        out[OFM] += noc.hops(placement.block_end[li],
+                             placement.block_start[nli]) \
+            * lp.out_pixels * lp.c_out
+    return {k: v for k, v in out.items() if v}
 
 
 # --- Fig. 11 comparison data (normalized CE / normalized throughput of the

@@ -781,8 +781,12 @@ def calibrate_engine(engine: PEEngine, cnn, params: Dict[str, np.ndarray],
     import jax.numpy as jnp
 
     from repro.models.cnn import collect_layer_inputs
+    from repro.telemetry.spans import span
 
-    p32 = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
-    inputs = collect_layer_inputs(p32, jnp.asarray(images, jnp.float32), cnn)
-    for name in todo:
-        engine.calibrate_layer(name, np.asarray(inputs[name]), params[name])
+    with span(f"calibrate:{cnn.name}", engine=engine.name, layers=len(todo)):
+        p32 = {k: jnp.asarray(v, jnp.float32) for k, v in params.items()}
+        inputs = collect_layer_inputs(p32, jnp.asarray(images, jnp.float32),
+                                      cnn)
+        for name in todo:
+            engine.calibrate_layer(name, np.asarray(inputs[name]),
+                                   params[name])

@@ -98,6 +98,7 @@ from repro.core.schedule import (
 )
 from repro.core.simulator import BlockSimulator, SimCounters, simulate_fc
 from repro.core.trace import TracePlan, TraceExecutor, compile_trace
+from repro.telemetry.spans import span
 from repro.core.transport import (
     OFM,
     RESIDUAL,
@@ -272,6 +273,10 @@ class NetworkSimulator:
                     "layer, so it would run inline on the main path")
             prev = layer
         self.cnn = cnn
+        # optional telemetry hook (repro.telemetry.LinkRecorder): attach
+        # to resolve routed traffic to individual mesh links; None (the
+        # default) keeps every transport on the zero-overhead path
+        self.recorder = None
         # split quantized {"q","s"} leaves (CIM-resident serving) from the
         # float view: quantized engines consume the int8 weights directly,
         # the float view feeds the exact engine and gain calibration
@@ -342,12 +347,14 @@ class NetworkSimulator:
         self._trace_plans: Dict[Tuple[int, int], TracePlan] = {}
         self._executors: Dict[Tuple[int, int], TraceExecutor] = {}
         if backend == "trace":
-            for li, sched in enumerate(self.schedules):
-                if sched is not None:
-                    self._trace_plans[li, 0] = compile_trace(sched)
-            for li, strips in self._strips.items():
-                for si, strip in enumerate(strips):
-                    self._trace_plans[li, si] = compile_trace(strip.sched)
+            with span(f"trace_lower:{cnn.name}",
+                      layers=len(self.schedules) + len(self._strips)):
+                for li, sched in enumerate(self.schedules):
+                    if sched is not None:
+                        self._trace_plans[li, 0] = compile_trace(sched)
+                for li, strips in self._strips.items():
+                    for si, strip in enumerate(strips):
+                        self._trace_plans[li, si] = compile_trace(strip.sched)
         # the layer pipeline as explicit stages — the sequential run walks
         # them one frame at a time, the streaming executor overlaps frames
         self._stages: Tuple[_Stage, ...] = self._build_stages()
@@ -525,7 +532,7 @@ class NetworkSimulator:
         li = stage.li
         layer = self.cnn.layers[li]
         transport = NoCTransport(noc, base=placement.block_start[li],
-                                 counters=traffic)
+                                 counters=traffic, recorder=self.recorder)
         if stage.kind == "fc":
             assert isinstance(layer, FCLayer)
             if x.ndim == 4:
@@ -540,7 +547,8 @@ class NetworkSimulator:
                 counters=counters, transport=transport,
                 engine=self.pe_engine, handle=self._handles[li])
 
-        mesh_root = NoCTransport(noc, base=0, counters=traffic)
+        mesh_root = NoCTransport(noc, base=0, counters=traffic,
+                                 recorder=self.recorder)
         if layer.name.endswith("_a"):
             saved[layer.name] = (x, stage.prev_li)  # residual save (Fig. 2)
         y = self._run_layer(li, transport, counters, x)
@@ -551,7 +559,8 @@ class NetworkSimulator:
                 # the saved block input
                 sc_li = stage.sc_li
                 sc_tr = NoCTransport(noc, base=placement.block_start[sc_li],
-                                     counters=traffic)
+                                     counters=traffic,
+                                     recorder=self.recorder)
                 self._record_residual(mesh_root, block_in_src,
                                       placement.block_start[sc_li], block_in)
                 shortcut = self._run_layer(sc_li, sc_tr, counters, block_in)
@@ -577,7 +586,8 @@ class NetworkSimulator:
         placement = self.placement
         lp = self.plan.layers[src_li]
         nbytes = lp.out_pixels * lp.c_out  # 8b activations
-        NoCTransport(placement.noc, base=0, counters=traffic).record(
+        NoCTransport(placement.noc, base=0, counters=traffic,
+                     recorder=self.recorder).record(
             placement.block_end[src_li], placement.block_start[dst_li],
             OFM, nbytes)
 

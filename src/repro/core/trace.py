@@ -73,6 +73,7 @@ from repro.core.instructions import BUF_PUSH, FROM_PE, Instruction, Port
 from repro.core.schedule import BlockSchedule
 from repro.core.simulator import SimCounters, _standalone_transport
 from repro.core.transport import CHAIN, GROUP, PSUM_BYTES, NoCTransport
+from repro.telemetry.spans import span
 
 
 @dataclass(frozen=True)
@@ -334,7 +335,8 @@ class TraceExecutor:
         s = self.sched
         qs = self.engine.quant_stream(self.handle, stream)
         if self._jax_fn is None:
-            self._jax_fn = self._build_jax_qfn()
+            with span(f"jit_build:{self.sched.layer_name}", cat="jit"):
+                self._jax_fn = self._build_jax_qfn()
         csum = self._jax_fn(qs.astype(np.int8))
         b = stream.shape[0]
         out = np.asarray(csum, np.float64).reshape(b, s.e, s.f, s.c_out)
@@ -416,7 +418,8 @@ class TraceExecutor:
         float32 (no x64 requirement), so it is *allclose* to — not
         bitwise-equal with — the numpy path; counters are identical."""
         if self._jax_fn is None:
-            self._jax_fn = self._build_jax_fn()
+            with span(f"jit_build:{self.sched.layer_name}", cat="jit"):
+                self._jax_fn = self._build_jax_fn()
         out = self._jax_fn(np.asarray(ifm, np.float32))
         return np.asarray(out, np.float64)
 

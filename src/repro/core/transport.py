@@ -65,10 +65,15 @@ class NoCTransport:
     """
 
     def __init__(self, noc: MeshNoC, base: int = 0,
-                 counters: Optional[TrafficCounters] = None):
+                 counters: Optional[TrafficCounters] = None,
+                 recorder: Optional[Any] = None):
         self.noc = noc
         self.base = base
         self.counters = counters if counters is not None else TrafficCounters()
+        # optional per-link telemetry hook (repro.telemetry.LinkRecorder):
+        # called with global tile ids for every accounting record; the
+        # default None keeps the hot path at a single identity test
+        self.recorder = recorder
         # (cycle, local_dst, port) -> payload list, FIFO per link
         self._mail: Dict[Tuple[int, int, str], List[Any]] = defaultdict(list)
 
@@ -87,6 +92,9 @@ class NoCTransport:
         h = self.hops(src, dst)
         self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
         self.counters.add(kind, h, nbytes)
+        if self.recorder is not None:
+            self.recorder.record(self.base + src, self.base + dst,
+                                 kind, nbytes, 1, h)
         arrival = cycle + max(1, h)
         self._mail[(arrival, dst, port)].append(payload)
         return arrival
@@ -98,6 +106,9 @@ class NoCTransport:
         h = self.hops(src, dst)
         self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
         self.counters.add(kind, h, nbytes)
+        if self.recorder is not None:
+            self.recorder.record(self.base + src, self.base + dst,
+                                 kind, nbytes, 1, h)
         return h
 
     def record_bulk(self, src: int, dst: int, kind: str, nbytes: int,
@@ -109,6 +120,9 @@ class NoCTransport:
         h = self.hops(src, dst)
         self.noc.add_traffic(self.base + src, self.base + dst, nbytes * count)
         self.counters.add(kind, h, nbytes, count=count)
+        if self.recorder is not None:
+            self.recorder.record(self.base + src, self.base + dst,
+                                 kind, nbytes, count, h)
         return h
 
     def deliver(self, cycle: int, dst: int, port: str) -> Iterator[Any]:

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.cnn import CNN_BENCHMARKS, CNNConfig, ConvLayer
 from repro.dse.search import Candidate, SearchResult, search
 from repro.dse.space import DesignSpace
+from repro.telemetry.spans import span
 
 #: (attribute, sense) — sense +1 maximizes, -1 minimizes
 PARETO_AXES: Tuple[Tuple[str, int], ...] = (
@@ -170,14 +171,16 @@ def run_dse(models: Sequence[str], budget: int = 128, seed: int = 0,
         dup_cap = 128 if name == "resnet50-imagenet" else 64
         space = space_factory(cnn) if space_factory else DesignSpace(
             cnn, dup_caps=(dup_cap,))
-        result = search(cnn, space, budget=budget, seed=seed,
-                        dup_cap=dup_cap, cim_spec=cim_spec)
+        with span(f"dse_search:{name}", cat="dse", budget=budget):
+            result = search(cnn, space, budget=budget, seed=seed,
+                            dup_cap=dup_cap, cim_spec=cim_spec)
         winner = result.winner()
         validated: Optional[bool] = None
         if validate == "all" or (validate == "cifar10"
                                  and cnn.dataset == "cifar10"):
-            validated = validate_bitwise(cnn, winner, seed=seed,
-                                         engine=engine)
+            with span(f"dse_validate:{name}", cat="dse"):
+                validated = validate_bitwise(cnn, winner, seed=seed,
+                                             engine=engine)
         reports.append(ModelReport(model=name, result=result,
                                    winner=winner, validated=validated))
     return reports

@@ -28,6 +28,7 @@ from repro.core.mapping import NetworkPlan
 from repro.core.noc import Placement
 from repro.dse.placements import network_links
 from repro.dse.space import Built, DesignSpace, MappingConfig, layer_specs_for
+from repro.telemetry.spans import span
 
 
 @dataclass(frozen=True)
@@ -217,11 +218,12 @@ def search(cnn: CNNConfig, space: Optional[DesignSpace] = None,
             return seen[cfg]
         if evals >= budget:
             return None
-        built = space.build(cfg)
-        evals += 1
-        if built is None:
-            return None
-        cand = evaluate(cnn, built, cim_spec, accuracy=acc_of(cfg))
+        with span(f"dse_eval:{cnn.name}", cat="dse", eval=evals):
+            built = space.build(cfg)
+            evals += 1
+            if built is None:
+                return None
+            cand = evaluate(cnn, built, cim_spec, accuracy=acc_of(cfg))
         seen[cfg] = cand
         return cand
 

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.cim import CIMSpec
 from repro.core.engine import CIMEngine, PallasEngine
 from repro.core.variation import VARIATION_PRESETS, VariationModel
+from repro.telemetry.spans import span
 
 __all__ = ["TrialStats", "RobustnessReport", "monte_carlo_sweep",
            "sweep_presets", "build_robust_sim"]
@@ -172,8 +173,10 @@ def monte_carlo_sweep(cnn, params: Dict[str, np.ndarray],
         agree_n: List[float] = []
         agree_f: List[float] = []
         for t in range(trials):
-            sim.set_variation(variation.reseed(seed0 + t))
-            top1 = np.argmax(sim.run(images).logits, axis=-1)
+            with span(f"mc_trial:{cnn.name}", cat="robustness", trial=t):
+                with span("engine_swap", cat="robustness", trial=t):
+                    sim.set_variation(variation.reseed(seed0 + t))
+                top1 = np.argmax(sim.run(images).logits, axis=-1)
             agree_n.append(float(np.mean(top1 == top1_n)))
             agree_f.append(float(np.mean(top1 == top1_f)))
     finally:

@@ -279,8 +279,19 @@ class StreamServeReport:
     def latency_s(self) -> np.ndarray:
         return self.latency_cycles / self.clock_hz
 
+    @property
+    def completed(self) -> int:
+        """Requests that made it through the pipeline."""
+        return int(self.latency_cycles.size)
+
     def latency_percentiles(self, qs=(50, 95, 99)) -> Dict[str, float]:
-        """Per-request latency percentiles in cycles (keys ``p50``...)."""
+        """Per-request latency percentiles in cycles (keys ``p50``...).
+
+        A zero-completed-request run reports ``{}`` — there is no
+        latency distribution to summarize (``np.percentile`` would
+        raise on the empty array)."""
+        if self.latency_cycles.size == 0:
+            return {}
         return {f"p{q}": float(np.percentile(self.latency_cycles, q))
                 for q in qs}
 
@@ -310,11 +321,19 @@ def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
                             engine=engine, **kw)
 
 
+#: serve-latency histogram bounds (step-clock cycles, geometric ladder
+#: covering CIFAR pipelines through ImageNet fill latencies)
+LATENCY_BUCKETS_CYCLES = (
+    1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5, 2e5, 5e5, 1e6, 2e6, 5e6, 1e7)
+
+
 def serve_stream(sim, frames: np.ndarray,
                  offered_inf_s: Optional[float] = None,
                  clock_hz: Optional[float] = None,
                  hist_bins: int = 16,
-                 straggler: Optional["StragglerMonitor"] = None
+                 straggler: Optional["StragglerMonitor"] = None,
+                 metrics: Optional["MetricsRegistry"] = None,
+                 metric_labels: Optional[Dict[str, str]] = None
                  ) -> StreamServeReport:
     """Request-queue front-end over the streaming simulator.
 
@@ -334,9 +353,17 @@ def serve_stream(sim, frames: np.ndarray,
     ``report.flagged_frames``, and ``trip_limit`` consecutive flags set
     ``report.straggler_escalate`` — a queue drifting past the pipeline's
     steady state, the serving-side analogue of a slow pod member.
+
+    ``metrics`` (a ``repro.telemetry.MetricsRegistry``) registers
+    Prometheus-style series — completed/flagged frame counters, the
+    latency histogram, queue-depth distribution and goodput gauges.
+    ``metric_labels`` (e.g. ``{"tenant": "a"}``) attaches every series
+    to that label set, so multi-tenant serving scrapes per-tenant
+    series from one shared registry without any refactor.
     """
     from repro.core.energy import STEP_CLOCK_HZ
     from repro.runtime.fault import StragglerMonitor
+    from repro.telemetry.spans import span as _tspan
 
     if clock_hz is None:
         clock_hz = STEP_CLOCK_HZ
@@ -346,18 +373,35 @@ def serve_stream(sim, frames: np.ndarray,
         spacing = float(sim.plan.initiation_interval)
     else:
         spacing = clock_hz / offered_inf_s
+    if t_n == 0:
+        # explicit empty report: nothing arrived, nothing completed —
+        # downstream percentile/histogram consumers must not blow up,
+        # and a metrics scrape still sees the zero-valued series
+        empty = np.empty(0, np.int64)
+        report = StreamServeReport(
+            arrivals=empty, latency_cycles=empty,
+            measured_ii=0, analytic_ii=sim.plan.initiation_interval,
+            fill_latency=0, offered_inf_s=clock_hz / spacing,
+            throughput_inf_s=0.0, clock_hz=clock_hz,
+            latency_hist=np.histogram(empty, bins=hist_bins))
+        if metrics is not None:
+            _export_serve_metrics(metrics, dict(metric_labels or {}),
+                                  report, None)
+        return report
     arrivals = np.floor(np.arange(t_n) * spacing).astype(np.int64)
-    res = sim.run_stream(frames, arrivals=arrivals)
+    with _tspan(f"serve_stream:{sim.cnn.name}", frames=t_n):
+        res = sim.run_stream(frames, arrivals=arrivals)
     lat = res.frame_latency
     exits = res.finish[:, -1]
-    span = int(exits[-1] - exits[0])
-    throughput = (clock_hz * (t_n - 1) / span) if span > 0 else float("inf")
+    exit_span = int(exits[-1] - exits[0])
+    throughput = (clock_hz * (t_n - 1) / exit_span) if exit_span > 0 \
+        else float("inf")
     counts, edges = np.histogram(lat, bins=hist_bins)
     mon = StragglerMonitor() if straggler is None else straggler
     escalate = False
     for i, cycles in enumerate(lat):
         escalate = mon.observe(i, float(cycles) / clock_hz) or escalate
-    return StreamServeReport(
+    report = StreamServeReport(
         arrivals=arrivals, latency_cycles=lat,
         measured_ii=res.measured_ii, analytic_ii=res.analytic_ii,
         fill_latency=res.fill_latency,
@@ -365,6 +409,59 @@ def serve_stream(sim, frames: np.ndarray,
         clock_hz=clock_hz, latency_hist=(counts, edges),
         flagged_frames=tuple(mon.flagged_steps),
         straggler_escalate=escalate)
+    if metrics is not None:
+        _export_serve_metrics(metrics, dict(metric_labels or {}),
+                              report, res)
+    return report
+
+
+def _export_serve_metrics(metrics, labels: Dict[str, str],
+                          report: StreamServeReport, res) -> None:
+    """Register/update the serving series on a telemetry registry.
+
+    ``res`` is the stream result (for exit times) or None for an
+    empty run, which still registers every series at zero."""
+    lnames = tuple(sorted(labels))
+
+    def series(fam):
+        return fam.labels(**labels)
+
+    series(metrics.counter(
+        "serve_frames_total", "requests completed", lnames)).inc(
+            report.completed)
+    series(metrics.counter(
+        "serve_flagged_total", "straggler-flagged requests",
+        lnames)).inc(len(report.flagged_frames))
+    hist = series(metrics.histogram(
+        "serve_latency_cycles", "closed-loop request latency (cycles)",
+        lnames, buckets=LATENCY_BUCKETS_CYCLES))
+    for cycles in report.latency_cycles:
+        hist.observe(float(cycles))
+    # queue depth sampled at each arrival: arrived minus already exited
+    exits = np.sort(res.finish[:, -1]) if res is not None \
+        else np.empty(0, np.int64)
+    depth_hist = series(metrics.histogram(
+        "serve_queue_depth", "frames in flight at each arrival", lnames,
+        buckets=(1, 2, 4, 8, 16, 32, 64, 128)))
+    peak = 0
+    for i, a in enumerate(report.arrivals):
+        depth = (i + 1) - int(np.searchsorted(exits, a, side="right"))
+        peak = max(peak, depth)
+        depth_hist.observe(depth)
+    series(metrics.gauge(
+        "serve_queue_depth_peak", "max frames in flight", lnames)).set(peak)
+    series(metrics.gauge(
+        "serve_goodput_inf_s", "measured completion rate", lnames)).set(
+            report.throughput_inf_s)
+    series(metrics.gauge(
+        "serve_offered_inf_s", "offered request rate", lnames)).set(
+            report.offered_inf_s)
+    series(metrics.gauge(
+        "serve_measured_ii_cycles", "steady-state exit spacing",
+        lnames)).set(report.measured_ii)
+    series(metrics.gauge(
+        "serve_straggler_escalate", "monitor escalation tripped",
+        lnames)).set(1.0 if report.straggler_escalate else 0.0)
 
 
 def greedy_generate(serve: ServeProgram, params, batch_in, steps: int):

@@ -1,0 +1,209 @@
+"""Per-link NoC traffic accounting: recorder hook, heatmaps, conservation.
+
+`TrafficCounters` (PR 1) keeps per-*class* byte-hop totals; this module
+resolves them one level down to per-*link* loads.  A
+:class:`LinkRecorder` attaches to the simulator (``sim.recorder = rec``)
+and is invoked by every :class:`repro.core.transport.NoCTransport`
+accounting call with the *global* tile ids, packet class, payload and
+hop count.  It walks the same memoized :meth:`MeshNoC.route` XY path
+the energy model charges, crediting ``nbytes * count`` to every
+directed link on the path — so per-class link sums equal the
+``TrafficCounters`` byte-hop totals *by construction* (path length ==
+the ``hops`` the counters were charged), extending the PR 1
+equal-by-construction guarantee from class totals to individual links.
+
+:func:`check_conservation` closes the triangle against the analytic
+side: ``repro.core.energy.routed_byte_hops_per_class`` predicts the
+functional simulator's routed traffic per class as exact integers, and
+all three views (heatmap link sums, counters, analytic) must agree to
+the byte.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+from repro.core.noc import MeshNoC
+from repro.core.transport import CHAIN, GROUP, OFM, RESIDUAL, SPLIT
+
+#: routed packet classes, in rendering order
+TRAFFIC_CLASSES: Tuple[str, ...] = (CHAIN, GROUP, SPLIT, OFM, RESIDUAL)
+
+Link = Tuple[Tuple[int, int], Tuple[int, int]]  # ((r, c) -> (r, c))
+
+
+@dataclass
+class FlowStats:
+    """Aggregate for one ``(src_tile, dst_tile, class)`` flow."""
+    packets: int = 0
+    bytes: int = 0
+    byte_hops: int = 0
+
+
+class LinkRecorder:
+    """Attributes routed traffic to individual mesh links.
+
+    The transport hot path pays a single ``is not None`` test when no
+    recorder is attached; when attached, each accounting call walks the
+    memoized XY route once per *flow record* (not per cycle — the
+    transports already batch per-fire traffic), so recording overhead
+    is proportional to the number of distinct sends, not cycles.
+    """
+
+    def __init__(self, noc: MeshNoC):
+        self.noc = noc
+        self.flows: Dict[Tuple[int, int, str], FlowStats] = {}
+        self.link_bytes: Dict[str, Dict[Link, int]] = {}
+
+    def record(self, src: int, dst: int, kind: str, nbytes: int,
+               count: int, hops: int) -> None:
+        """One accounting record: ``count`` packets of ``nbytes`` from
+        global tile ``src`` to ``dst`` over ``hops`` mesh hops."""
+        total = nbytes * count
+        fs = self.flows.get((src, dst, kind))
+        if fs is None:
+            fs = self.flows[(src, dst, kind)] = FlowStats()
+        fs.packets += count
+        fs.bytes += total
+        fs.byte_hops += total * hops
+        per_class = self.link_bytes.get(kind)
+        if per_class is None:
+            per_class = self.link_bytes[kind] = {}
+        path = self.noc.route(src, dst)
+        for u, v in zip(path, path[1:]):
+            per_class[(u, v)] = per_class.get((u, v), 0) + total
+
+    def clear(self) -> None:
+        self.flows.clear()
+        self.link_bytes.clear()
+
+    def heatmap(self) -> "LinkHeatmap":
+        return LinkHeatmap(
+            rows=self.noc.rows, cols=self.noc.cols,
+            per_class={k: dict(v) for k, v in self.link_bytes.items()})
+
+
+@dataclass
+class LinkHeatmap:
+    """Per-link byte loads on a rows x cols mesh, split by class."""
+    rows: int
+    cols: int
+    per_class: Dict[str, Dict[Link, int]] = field(default_factory=dict)
+
+    def class_totals(self) -> Dict[str, int]:
+        """Sum of link loads per class == per-class byte-hops."""
+        return {k: sum(v.values()) for k, v in self.per_class.items()}
+
+    def combined(self) -> Dict[Link, int]:
+        out: Dict[Link, int] = {}
+        for loads in self.per_class.values():
+            for link, b in loads.items():
+                out[link] = out.get(link, 0) + b
+        return out
+
+    def top_links(self, n: int = 10) -> List[Tuple[Link, int, Dict[str, int]]]:
+        """The ``n`` hottest links: (link, total bytes, per-class split)."""
+        comb = self.combined()
+        ranked = sorted(comb.items(), key=lambda kv: (-kv[1], kv[0]))[:n]
+        out = []
+        for link, total in ranked:
+            split = {k: v[link] for k, v in sorted(self.per_class.items())
+                     if link in v}
+            out.append((link, total, split))
+        return out
+
+    def to_csv(self) -> str:
+        """``src_r,src_c,dst_r,dst_c,class,bytes`` rows, sorted."""
+        lines = ["src_r,src_c,dst_r,dst_c,class,bytes"]
+        for kind in sorted(self.per_class):
+            for (u, v), b in sorted(self.per_class[kind].items()):
+                lines.append(f"{u[0]},{u[1]},{v[0]},{v[1]},{kind},{b}")
+        return "\n".join(lines) + "\n"
+
+    def render(self) -> str:
+        """Text heatmap of the mesh: cells are ``+``; the glyph between
+        / below cells scales 0-9 with the bidirectional link load."""
+        comb = self.combined()
+        if not comb:
+            return "(no recorded traffic)\n"
+
+        def load(a: Tuple[int, int], b: Tuple[int, int]) -> int:
+            return comb.get((a, b), 0) + comb.get((b, a), 0)
+
+        peak = max(load(u, v) for (u, v) in comb) or 1
+
+        def glyph(x: int) -> str:
+            if x == 0:
+                return "."
+            return str(min(9, 1 + (9 * x) // (peak + 1)))
+
+        lines = [f"mesh {self.rows}x{self.cols}; glyphs scale 0-9 with "
+                 f"link load (peak {peak} B, bidirectional)"]
+        for r in range(self.rows):
+            row = []
+            for c in range(self.cols):
+                row.append("+")
+                if c + 1 < self.cols:
+                    row.append(glyph(load((r, c), (r, c + 1))))
+            lines.append("".join(row))
+            if r + 1 < self.rows:
+                lines.append("".join(
+                    glyph(load((r, c), (r + 1, c))) + " "
+                    for c in range(self.cols)).rstrip())
+        return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Conservation: heatmap == counters == analytic, to the byte
+# ---------------------------------------------------------------------------
+
+
+def check_conservation(heatmap: LinkHeatmap, counters,
+                       analytic: Optional[Mapping[str, int]] = None,
+                       flows: Optional[Iterable[FlowStats]] = None,
+                       ) -> List[str]:
+    """Exact-integer conservation check; returns mismatches (empty = ok).
+
+    Compares, per traffic class: the heatmap's per-link byte sums, the
+    simulator's :class:`TrafficCounters` byte-hop totals, and (when
+    given) the analytic per-class routed byte-hops from
+    ``repro.core.energy.routed_byte_hops_per_class``.
+    """
+    problems: List[str] = []
+    hm = heatmap.class_totals()
+    sim = {k: int(v) for k, v in counters.byte_hops.items() if v}
+    for kind in sorted(set(hm) | set(sim)):
+        if hm.get(kind, 0) != sim.get(kind, 0):
+            problems.append(
+                f"{kind}: heatmap link sum {hm.get(kind, 0)} != "
+                f"counters byte-hops {sim.get(kind, 0)}")
+    if analytic is not None:
+        an = {k: int(v) for k, v in analytic.items() if v}
+        for kind in sorted(set(an) | set(sim)):
+            if an.get(kind, 0) != sim.get(kind, 0):
+                problems.append(
+                    f"{kind}: analytic byte-hops {an.get(kind, 0)} != "
+                    f"counters byte-hops {sim.get(kind, 0)}")
+    if flows is not None:
+        per_flow = sum(f.byte_hops for f in flows)
+        total = sum(sim.values())
+        if per_flow != total:
+            problems.append(
+                f"flow byte-hop sum {per_flow} != counters total {total}")
+    return problems
+
+
+def record_run(sim, images):
+    """Run ``sim`` on ``images`` with a fresh recorder attached.
+
+    Returns ``(result, recorder)``; the recorder is detached afterwards
+    so subsequent runs are back on the zero-overhead path.
+    """
+    rec = LinkRecorder(sim.placement.noc)
+    prev = sim.recorder
+    sim.recorder = rec
+    try:
+        res = sim.run(images)
+    finally:
+        sim.recorder = prev
+    return res, rec
