@@ -21,6 +21,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   zero-variation bitwise check.  Accuracy rows, not wall time —
   ``--check-regress`` never speed-gates them (it only fails on a
   committed ``False`` match field, exactly like ``cim_*``)
+* ``chiplet_*`` — chiplet scale-out rows (``--chiplet``): 2- and
+  4-chiplet shards of the large models on the two-level
+  ``ChipletFabric`` under each shipped NoI topology — per-level
+  byte-hop split (intra-mesh vs interposer), the analytic II (invariant
+  under sharding: blocks never span chiplets) and the energy delta vs
+  the flat single mesh — plus a ``chiplet_*_degenerate`` row per model
+  asserting the 1x1-chiplet fabric reproduces the flat-mesh energy
+  report exactly.  Analytic match rows: ``--check-regress`` gates them
+  on their embedded ``True``/``False`` match fields (exactly like
+  ``cim_*``/``robust_*``), never on wall time
 * ``roofline_*`` — summary of the dry-run roofline table if present
   (skipped with a note when ``results/dryrun.json`` is absent — a
   placeholder row is never written)
@@ -749,6 +759,156 @@ def bench_dse(budget: int = 64):  # > default space size: exhaustive sweep
     return rows
 
 
+#: models x chiplet counts for the --chiplet rows: the large models the
+#: scale-out targets (ROADMAP item 5), plus resnet18 as the CIFAR-sized
+#: cross-check the smoke/test suite simulates end-to-end
+CHIPLET_BENCH_SHARDS = (
+    ("resnet18-cifar10", (2,)),
+    ("vgg19-imagenet", (2, 4)),
+    ("resnet50-imagenet", (2, 4)),
+)
+
+
+def bench_chiplet():
+    """Chiplet scale-out rows (``--chiplet``): shard each model over a
+    2-/4-chiplet ``ChipletFabric`` per shipped NoI topology and report
+    the per-level byte-hop split (intra-mesh classes vs the ``noi``
+    interposer level), the analytic II (invariant under sharding —
+    blocks never span chiplets, so the slowest stage is unchanged) and
+    the energy delta vs the flat single mesh.  A ``*_degenerate`` row
+    per model asserts the 1x1-chiplet fabric's energy report equals the
+    flat mesh's exactly.  All rows are analytic (no cycle simulation)
+    and carry ``True``/``False`` match fields: ``--check-regress``
+    match-gates them, never speed-gates."""
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.energy import analyze_plan
+    from repro.core.mapping import plan_network
+    from repro.core.noc import place_network, shard_network
+    from repro.core.transport import NOI
+
+    rows = []
+    for name, counts in CHIPLET_BENCH_SHARDS:
+        cnn = CNN_BENCHMARKS[name]()
+        dup_cap = 128 if name == "resnet50-imagenet" else 64
+        plan = plan_network(cnn, dup_cap=dup_cap)
+        flat_placement = place_network(plan)
+        flat = analyze_plan(cnn, plan, placement=flat_placement)
+
+        # degenerate 1x1 fabric: every energy term and per-class routed
+        # byte-hop must equal the flat mesh exactly (the refactor's
+        # safety invariant, checked analytically on every model here and
+        # bitwise end-to-end by --chiplet-smoke / the test suite)
+        us, deg = _t(lambda: analyze_plan(
+            cnn, plan, placement=shard_network(plan, 1)), reps=1)
+        match = (deg.breakdown() == flat.breakdown()
+                 and deg.routed_byte_hops == flat.routed_byte_hops)
+        rows.append((f"chiplet_{name}_degenerate", us,
+                     f"fabric_1x1_equals_flat_mesh={match} "
+                     f"total_uJ={flat.e_total * 1e6:.2f}"))
+
+        for ch in counts:
+            for noi in ("mesh", "floret"):
+                t0 = time.perf_counter()
+                placement = shard_network(plan, ch, noi=noi)
+                rep = analyze_plan(cnn, plan, placement=placement)
+                us = (time.perf_counter() - t0) * 1e6
+                per_class = rep.routed_byte_hops
+                noi_bh = per_class.get(NOI, 0)
+                mesh_bh = sum(per_class.values()) - noi_bh
+                delta = 100.0 * (rep.e_total - flat.e_total) / flat.e_total
+                # the analytic II is invariant under sharding because
+                # blocks never span chiplets: the sharded placement's
+                # block spans must equal the flat mesh's exactly (the
+                # same invariant NetworkSimulator enforces on injection)
+                ii_match = (placement.block_start
+                            == flat_placement.block_start
+                            and placement.block_end
+                            == flat_placement.block_end)
+                rows.append((
+                    f"chiplet_{name}_c{ch}_{noi}", us,
+                    f"mesh_byte_hops={mesh_bh} noi_byte_hops={noi_bh} "
+                    f"analytic_II={plan.initiation_interval} "
+                    f"ii_invariant={ii_match} "
+                    f"noi_uJ={rep.e_noi * 1e6:.3f} "
+                    f"energy_vs_single_mesh={delta:+.3f}%"))
+    return rows
+
+
+def chiplet_smoke(seed: int = 0) -> int:
+    """Bounded chiplet CI smoke (``--chiplet-smoke``): non-zero exit on
+    (1) any divergence — logits, ``TrafficCounters``, energy breakdown,
+    heatmap render — between the flat mesh and the degenerate
+    1x1-chiplet fabric on two fixed-seed vgg11 frames, or (2) any
+    per-level (intra-mesh AND noi, exact integers) sim == energy ==
+    heatmap conservation mismatch on a 2-chiplet resnet18 shard."""
+    import numpy as np
+
+    from repro.configs.cnn import CNN_BENCHMARKS
+    from repro.core.energy import analyze_plan, routed_byte_hops_per_class
+    from repro.core.mapping import plan_network
+    from repro.core.network import NetworkSimulator
+    from repro.core.noc import shard_network
+    from repro.core.transport import NOI
+    from repro.telemetry.heatmap import check_conservation, record_run
+
+    ok = True
+
+    # (1) degenerate 1x1 fabric vs flat mesh: bitwise across every view
+    rng = np.random.default_rng(seed)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = _bench_params(cnn, rng)
+    frames = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+    flat_sim = NetworkSimulator(cnn, params, backend="trace")
+    fab_sim = NetworkSimulator(cnn, params, backend="trace",
+                               placement=shard_network(flat_sim.plan, 1))
+    flat_res, flat_rec = record_run(flat_sim, frames)
+    fab_res, fab_rec = record_run(fab_sim, frames)
+    checks = {
+        "logits": flat_res.logits.tobytes() == fab_res.logits.tobytes(),
+        "counters": dict(flat_res.traffic.byte_hops)
+        == dict(fab_res.traffic.byte_hops)
+        and dict(flat_res.traffic.packets) == dict(fab_res.traffic.packets),
+        "energy": analyze_plan(cnn, flat_sim.plan,
+                               placement=flat_sim.placement).breakdown()
+        == analyze_plan(cnn, fab_sim.plan,
+                        placement=fab_sim.placement).breakdown(),
+        "heatmap": flat_rec.heatmap().render() == fab_rec.heatmap().render()
+        and flat_rec.heatmap().per_class == fab_rec.heatmap().per_class,
+    }
+    for what, same in checks.items():
+        if not same:
+            print(f"chiplet-smoke: 1x1 fabric diverged from flat mesh "
+                  f"on {what}")
+            ok = False
+
+    # (2) 2-chiplet resnet18 shard: three-way per-level conservation
+    rng = np.random.default_rng(seed)
+    cnn18 = CNN_BENCHMARKS["resnet18-cifar10"]()
+    params18 = _bench_params(cnn18, rng)
+    x = rng.integers(0, 2, (1, 32, 32, 3)).astype(np.float64)
+    plan18 = plan_network(cnn18, dup_cap=64)
+    sim18 = NetworkSimulator(cnn18, params18, backend="trace",
+                             placement=shard_network(plan18, 2))
+    res18, rec18 = record_run(sim18, x)
+    analytic = routed_byte_hops_per_class(cnn18, sim18.plan, sim18.placement)
+    problems = check_conservation(rec18.heatmap(), res18.traffic, analytic,
+                                  flows=rec18.flows.values())
+    for p in problems:
+        print(f"chiplet-smoke: conservation: {p}")
+    noi_bh = int(res18.traffic.byte_hops.get(NOI, 0))
+    if noi_bh <= 0:
+        print("chiplet-smoke: 2-chiplet shard routed zero NoI traffic — "
+              "the interposer level is not being exercised")
+        ok = False
+    ok = ok and not problems
+
+    print(f"chiplet-smoke: {'ok' if ok else 'FAIL'} — vgg11 1x1 fabric "
+          f"bitwise vs flat mesh ({', '.join(checks)}), resnet18 "
+          f"2-chiplet shard sim==energy==heatmap per level "
+          f"(noi={noi_bh} byte-hops, exact)")
+    return 0 if ok else 1
+
+
 def bench_roofline_summary():
     path = os.path.join(os.path.dirname(__file__), "..", "results",
                         "dryrun.json")
@@ -793,14 +953,18 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     bench's bounded frame counts, so their wall time is not a steady-
     state signal — ``cim_*`` quantized-accuracy rows, ``robust_*``
     Monte-Carlo variation rows, and ``tab4_*``/``fig*`` model rows) are
-    never speed-gated.  ``cim_*`` and ``robust_*`` rows are instead
-    checked for *equality of match*, not speed: each row carries its own
-    bitwise/agreement result — for ``robust_*`` the zero-variation
-    bitwise field — and this gate fails if any committed row of either
-    family carries a ``False`` match field (the live paths themselves
-    are gated by ``--cim-smoke`` / ``--fault-smoke``); their wall time
-    includes one-off calibration, Monte-Carlo trial counts and jit
-    warmup, so a speed ratio on them would gate noise, not code.
+    never speed-gated.  ``cim_*``, ``robust_*`` and ``chiplet_*`` rows
+    are instead checked for *equality of match*, not speed: each row
+    carries its own bitwise/agreement result — for ``robust_*`` the
+    zero-variation bitwise field, for ``chiplet_*`` the
+    1x1-fabric-equals-flat-mesh and block-span-invariance fields — and
+    this gate fails if any committed row of these families carries a
+    ``False`` match field (the live paths themselves are gated by
+    ``--cim-smoke`` / ``--fault-smoke`` / ``--chiplet-smoke``); their
+    wall time includes one-off calibration, Monte-Carlo trial counts
+    and jit warmup (``chiplet_*`` rows are pure analytic-model time),
+    so a speed ratio on them would gate noise, not code — ``chiplet_*``
+    rows are match-gated, never speed-gated.
     ``cim_*_trace`` rows are
     the exception: each embeds its own self-normalized
     ``ratio_vs_exact`` (both paths timed on the same frames in the same
@@ -820,11 +984,11 @@ def check_regress(baseline_path: str = "BENCH_core.json",
     # quantized-engine result (bitwise=False / a broken agreement field)
     # must not sit silently in the committed baseline
     bad_match = [r["name"] for r in brows
-                 if r["name"].startswith(("cim_", "robust_"))
+                 if r["name"].startswith(("cim_", "robust_", "chiplet_"))
                  and "False" in r["derived"]]
     if bad_match:
-        print("check-regress: FAIL — committed cim_*/robust_* rows carry "
-              f"a False match field: {', '.join(bad_match)}")
+        print("check-regress: FAIL — committed cim_*/robust_*/chiplet_* "
+              f"rows carry a False match field: {', '.join(bad_match)}")
         return 1
     # cim_*_trace ratio gate: the committed quantized-vs-exact trace
     # ratio (self-normalized — both paths timed on the same frames in
@@ -982,6 +1146,18 @@ def main(argv=None) -> None:
                          "dse_* winner rows (merged into the JSON "
                          "baseline; without --dse a --json rewrite keeps "
                          "the previously committed dse_* rows)")
+    ap.add_argument("--chiplet", action="store_true",
+                    help="also emit chiplet_* scale-out rows (per-level "
+                         "byte-hop split, analytic II, energy delta vs "
+                         "single mesh; match-gated by --check-regress, "
+                         "never speed-gated; without --chiplet a --json "
+                         "rewrite keeps the committed chiplet_* rows)")
+    ap.add_argument("--chiplet-smoke", action="store_true",
+                    help="bounded chiplet-fabric smoke for CI: vgg11 "
+                         "1x1-fabric bitwise vs the flat mesh (logits, "
+                         "counters, energy, heatmap) plus a 2-chiplet "
+                         "resnet18 shard's per-level three-way "
+                         "conservation check; non-zero exit on mismatch")
     ap.add_argument("--stream-smoke", action="store_true",
                     help="bounded streaming smoke for CI: 4 fixed-seed "
                          "vgg11 frames through the pipelined executor; "
@@ -1021,6 +1197,8 @@ def main(argv=None) -> None:
         raise SystemExit(fault_smoke())
     if args.telemetry_smoke:
         raise SystemExit(telemetry_smoke(args.trace_out))
+    if args.chiplet_smoke:
+        raise SystemExit(chiplet_smoke())
 
     prof = None
     if args.trace_out:
@@ -1035,6 +1213,8 @@ def main(argv=None) -> None:
                bench_robust, bench_roofline_summary]
     if args.dse:
         benches.append(bench_dse)
+    if args.chiplet:
+        benches.append(bench_chiplet)
     for fn in benches:
         try:
             for name, us, derived in fn():
@@ -1047,15 +1227,17 @@ def main(argv=None) -> None:
                          "derived": f"ERROR {type(e).__name__}: {e}"})
 
     if args.json:
-        have_dse = any(r["name"].startswith("dse_") for r in rows)
-        if not have_dse and os.path.exists(args.json):
-            # a rewrite that produced no fresh dse_* rows (no --dse, or
-            # the DSE bench errored) keeps the committed winner rows
-            # instead of silently dropping them
+        # a rewrite that produced no fresh dse_*/chiplet_* rows (flag
+        # not passed, or the bench errored) keeps the committed rows of
+        # that family instead of silently dropping them
+        for prefix in ("dse_", "chiplet_"):
+            if any(r["name"].startswith(prefix) for r in rows) \
+                    or not os.path.exists(args.json):
+                continue
             try:
                 with open(args.json) as f:
                     rows.extend(r for r in json.load(f)["rows"]
-                                if r["name"].startswith("dse_"))
+                                if r["name"].startswith(prefix))
             except (KeyError, ValueError):
                 pass
         with open(args.json, "w") as f:

@@ -39,3 +39,10 @@ python -m benchmarks.run --fault-smoke
 # the telemetry-off overhead itself is gated by --check-regress above
 # (network_sim_vgg11_b4_trace runs with telemetry disabled).
 python -m benchmarks.run --telemetry-smoke --trace-out results/vgg11_trace.json
+# bounded chiplet-fabric smoke: the degenerate 1x1-chiplet ChipletFabric
+# must be bitwise-identical to the flat mesh on vgg11 (logits, traffic
+# counters, energy breakdown, heatmap render), and a 2-chiplet resnet18
+# shard must hold the three-way sim==energy==heatmap byte-hop equality
+# as exact integers per level (intra-mesh classes AND the noi interposer
+# level separately); exits non-zero on any mismatch
+python -m benchmarks.run --chiplet-smoke

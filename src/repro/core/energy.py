@@ -24,8 +24,9 @@ from typing import Dict
 from repro.configs.cnn import CNNConfig, ConvLayer
 from repro.core.cim import CIMSpec  # noqa: F401  (annotation: analyze(cim_spec=))
 from repro.core.mapping import NetworkPlan, plan_network
-from repro.core.noc import Placement, inter_block_byte_hops, place_network
-from repro.core.transport import (CHAIN, GROUP, OFM, RESIDUAL, SPLIT,
+from repro.core.noc import (Placement, inter_block_byte_hops_split,
+                            place_network)
+from repro.core.transport import (CHAIN, GROUP, NOI, OFM, RESIDUAL, SPLIT,
                                   conv_block_byte_hops, conv_links)
 
 # --- Tab. 3 component energies (45 nm, 1 V) --------------------------------
@@ -67,6 +68,15 @@ E_BUF_BYTE = 1.9e-12          # J per byte buffer R or W  (Tab. 3 Rifm buffer:
                               # 281.3 pJ/256 B = 1.1 pJ/B for the SRAM cell
                               # array + I/O registers amortized; fit to
                               # Tab. 4 VGG-16 "on-chip memory" 446.4 uJ)
+E_NOI_BYTE_HOP = 1.2e-12      # J per byte per interposer (NoI) hop — the
+                              # chiplet scale-out regime the paper never
+                              # crosses, so this is not a Tab. 4 fit: 8x the
+                              # on-chip mesh link, the CHIPSIM/SIAM-class
+                              # gateway SerDes + interposer wire cost at
+                              # ~0.15 pJ/bit.  Charged only for gateway-to-
+                              # gateway hops on a ChipletFabric; identically
+                              # zero on a flat mesh or 1x1-chiplet fabric,
+                              # so every Tab. 4 anchor reproduces exactly.
 
 STEP_CLOCK_HZ = 10e6          # instruction/step clock (Tab. 3)
 from repro.core.transport import PSUM_BYTES  # noqa: E402  (16b psums, shared
@@ -100,10 +110,11 @@ class EnergyReport:
     ii_cycles: int
     # energy per inference, joules, broken down as Tab. 4 does
     e_cim: float = 0.0
-    e_moving: float = 0.0
+    e_moving: float = 0.0   # intra-mesh link level only (per-level split)
     e_memory: float = 0.0
     e_other: float = 0.0
     e_offchip: float = 0.0  # always 0: Domino's claim (whole-model residency)
+    e_noi: float = 0.0      # interposer (NoI) level: 0 off a ChipletFabric
     # precision-aware split of e_cim (populated when a CIMSpec is passed;
     # zero under the flat Tab. 4 default — e_cim then carries the total)
     e_cim_array: float = 0.0    # analog MAC core, scales with a_bits
@@ -118,7 +129,8 @@ class EnergyReport:
 
     @property
     def e_total(self) -> float:
-        return self.e_cim + self.e_moving + self.e_memory + self.e_other + self.e_offchip
+        return (self.e_cim + self.e_moving + self.e_memory + self.e_other
+                + self.e_offchip + self.e_noi)
 
     @property
     def inferences_per_s(self) -> float:
@@ -167,6 +179,7 @@ class EnergyReport:
             "cim_input_uJ": self.e_cim_input * 1e6,
             "cim_adc_uJ": self.e_cim_adc * 1e6,
             "moving_uJ": self.e_moving * 1e6,
+            "noi_uJ": self.e_noi * 1e6,
             "memory_uJ": self.e_memory * 1e6,
             "other_uJ": self.e_other * 1e6,
             "offchip_uJ": self.e_offchip * 1e6,
@@ -288,9 +301,13 @@ def analyze_plan(cnn: CNNConfig, plan: NetworkPlan,
             rep.e_other += lp.c_in * lp.m_splits * E_SCHED_FETCH / plan.n_c
             rep.e_other += (lp.chain_len - 1) * lp.c_out * E_ADDER_8B * PSUM_BYTES
 
-    # inter-block OFM movement (snake placement, usually 1 hop)
-    rep.e_moving += inter_block_byte_hops(plan, placement=placement) \
-        * E_LINK_BYTE_HOP
+    # inter-block OFM movement, split by level: mesh hops at the on-chip
+    # link cost (snake placement, usually 1 hop), gateway-to-gateway NoI
+    # hops at the interposer cost — zero off a ChipletFabric, so the flat
+    # Tab. 4 anchors are untouched
+    mesh_bh, noi_bh = inter_block_byte_hops_split(plan, placement=placement)
+    rep.e_moving += mesh_bh * E_LINK_BYTE_HOP
+    rep.e_noi = noi_bh * E_NOI_BYTE_HOP
     rep.routed_byte_hops = routed_byte_hops_per_class(cnn, plan, placement)
     return rep
 
@@ -335,11 +352,27 @@ def routed_byte_hops_per_class(cnn: CNNConfig, plan: NetworkPlan,
     therefore the telemetry per-link heatmap sums) as integers, on any
     placement.  This is the analytic corner of the three-way
     conservation check in ``repro.telemetry.heatmap``.
+
+    On a :class:`~repro.core.noc.ChipletFabric` the accounting is
+    per-*level* like the transport's: a flow's intra-mesh hops stay
+    under its own class and its interposer hops accrue under ``"noi"``
+    — also as exact integers, so the three-way equality holds for the
+    intra-mesh classes AND the NoI level separately.  Chain/group/split
+    traffic never crosses chiplets (blocks shard at stage boundaries),
+    so only the OFM/residual streams carry an NoI share.
     """
     if placement is None:
         placement = place_network(plan)
     noc = placement.noc
-    out: Dict[str, int] = {CHAIN: 0, GROUP: 0, SPLIT: 0, OFM: 0, RESIDUAL: 0}
+    out: Dict[str, int] = {CHAIN: 0, GROUP: 0, SPLIT: 0, OFM: 0,
+                           RESIDUAL: 0, NOI: 0}
+
+    def stream(kind: str, src: int, dst: int, nbytes: int) -> None:
+        """One routed bulk stream, split by level (mirrors
+        ``NoCTransport._account``)."""
+        h_mesh, h_noi = noc.hop_levels(src, dst)
+        out[kind] += h_mesh * nbytes
+        out[NOI] += h_noi * nbytes
 
     def conv_chain(li: int) -> None:
         lp = plan.layers[li]
@@ -382,24 +415,20 @@ def routed_byte_hops_per_class(cnn: CNNConfig, plan: NetworkPlan,
                 conv_chain(sc_li)
                 lp_sc = plan.layers[sc_li]
                 if src_li is not None:
-                    out[RESIDUAL] += noc.hops(
-                        placement.block_end[src_li],
-                        placement.block_start[sc_li]) * nbytes_saved
-                out[RESIDUAL] += noc.hops(
-                    placement.block_end[sc_li],
-                    placement.block_end[li]) \
-                    * lp_sc.out_pixels * lp_sc.c_out
+                    stream(RESIDUAL, placement.block_end[src_li],
+                           placement.block_start[sc_li], nbytes_saved)
+                stream(RESIDUAL, placement.block_end[sc_li],
+                       placement.block_end[li],
+                       lp_sc.out_pixels * lp_sc.c_out)
             elif src_li is not None:
-                out[RESIDUAL] += noc.hops(
-                    placement.block_end[src_li],
-                    placement.block_end[li]) * nbytes_saved
+                stream(RESIDUAL, placement.block_end[src_li],
+                       placement.block_end[li], nbytes_saved)
     # inter-stage OFM streams (the simulator records raw route lengths,
     # no max(1, h) floor — co-located endpoints route zero hops)
     for (li, _sc, _p), (nli, _sc2, _p2) in zip(stages, stages[1:]):
         lp = plan.layers[li]
-        out[OFM] += noc.hops(placement.block_end[li],
-                             placement.block_start[nli]) \
-            * lp.out_pixels * lp.c_out
+        stream(OFM, placement.block_end[li], placement.block_start[nli],
+               lp.out_pixels * lp.c_out)
     return {k: v for k, v in out.items() if v}
 
 

@@ -38,6 +38,12 @@ GROUP = "group"    # group-sum tail -> next group tail (south)
 SPLIT = "split"    # FC-grid psum columns (Fig. 4)
 OFM = "ofm"        # block tail -> next block head (inter-layer stream)
 RESIDUAL = "residual"  # ResNet shortcut stream (block input -> add site)
+#: interposer hops of any flow crossing chiplets on a ChipletFabric —
+#: a *level*, not a dataflow: a cross-chiplet OFM stream charges its
+#: mesh hops under "ofm" and its gateway-to-gateway hops under "noi",
+#: so per-class counters stay per-level exact.  Never charged on a flat
+#: mesh (zero NoI hops keeps the counters dict identical).
+NOI = "noi"
 
 
 @dataclass
@@ -81,6 +87,25 @@ class NoCTransport:
         """Physical route length between two *local* tile ids."""
         return self.noc.hops(self.base + src, self.base + dst)
 
+    def _account(self, src: int, dst: int, kind: str, nbytes: int,
+                 count: int) -> int:
+        """Shared two-level accounting: per-link traffic, per-class
+        counters (intra-mesh hops under ``kind``, interposer hops under
+        :data:`NOI`) and the telemetry record.  On a flat mesh the NoI
+        level is identically zero, so nothing new is charged and the
+        counters stay byte-identical to the single-level accounting.
+        Returns the total route length."""
+        gsrc, gdst = self.base + src, self.base + dst
+        h_mesh, h_noi = self.noc.hop_levels(gsrc, gdst)
+        self.noc.add_traffic(gsrc, gdst, nbytes * count)
+        self.counters.add(kind, h_mesh, nbytes, count=count)
+        if h_noi:
+            self.counters.add(NOI, h_noi, nbytes, count=count)
+        if self.recorder is not None:
+            self.recorder.record(gsrc, gdst, kind, nbytes, count,
+                                 h_mesh + h_noi)
+        return h_mesh + h_noi
+
     def send(self, cycle: int, src: int, dst: int, port: str, payload: Any,
              kind: str, nbytes: int) -> int:
         """Route a packet; returns its arrival cycle (1 cycle / hop).
@@ -89,12 +114,7 @@ class NoCTransport:
         logical chain distance (each snake step is one physical hop), so
         arrivals never miss their schedule-table rendezvous slot.
         """
-        h = self.hops(src, dst)
-        self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
-        self.counters.add(kind, h, nbytes)
-        if self.recorder is not None:
-            self.recorder.record(self.base + src, self.base + dst,
-                                 kind, nbytes, 1, h)
+        h = self._account(src, dst, kind, nbytes, 1)
         arrival = cycle + max(1, h)
         self._mail[(arrival, dst, port)].append(payload)
         return arrival
@@ -103,13 +123,7 @@ class NoCTransport:
         """Account a routed bulk transfer without mailbox delivery (used
         for OFM/IFM streams between sequentially simulated blocks).
         Returns the route length."""
-        h = self.hops(src, dst)
-        self.noc.add_traffic(self.base + src, self.base + dst, nbytes)
-        self.counters.add(kind, h, nbytes)
-        if self.recorder is not None:
-            self.recorder.record(self.base + src, self.base + dst,
-                                 kind, nbytes, 1, h)
-        return h
+        return self._account(src, dst, kind, nbytes, 1)
 
     def record_bulk(self, src: int, dst: int, kind: str, nbytes: int,
                     count: int) -> int:
@@ -117,13 +131,7 @@ class NoCTransport:
         one call (the trace backend's whole-block accounting).  Equivalent
         to ``count`` :meth:`record` calls — counters and per-link traffic
         are additive.  Returns the route length."""
-        h = self.hops(src, dst)
-        self.noc.add_traffic(self.base + src, self.base + dst, nbytes * count)
-        self.counters.add(kind, h, nbytes, count=count)
-        if self.recorder is not None:
-            self.recorder.record(self.base + src, self.base + dst,
-                                 kind, nbytes, count, h)
-        return h
+        return self._account(src, dst, kind, nbytes, count)
 
     def deliver(self, cycle: int, dst: int, port: str) -> Iterator[Any]:
         """Pop every packet arriving at (dst, port) this cycle."""

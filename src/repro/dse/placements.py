@@ -429,6 +429,13 @@ def validate_placement(plan: NetworkPlan, placement: Placement
 
     Also checks the curve is a bijection onto the mesh and every tile id
     fits.
+
+    Works unchanged on a two-level :class:`~repro.core.noc.ChipletFabric`:
+    every rendezvoused link is within one block, blocks never span
+    chiplets (``shard_network`` cuts at stage boundaries), so ``hops``
+    resolves on the owning chiplet's local snake mesh and the slack
+    bounds apply as-is — only the bulk OFM/residual streams ever cross
+    the interposer, and those are not rendezvoused.
     """
     errs: List[str] = []
     noc = placement.noc

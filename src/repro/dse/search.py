@@ -26,6 +26,7 @@ from repro.core.cim import CIMSpec  # noqa: F401  (annotation: cim_spec=)
 from repro.core.energy import analyze_plan
 from repro.core.mapping import NetworkPlan
 from repro.core.noc import Placement
+from repro.core.transport import NOI
 from repro.dse.placements import network_links
 from repro.dse.space import Built, DesignSpace, MappingConfig, layer_specs_for
 from repro.telemetry.spans import span
@@ -42,6 +43,9 @@ class Score:
     total_byte_hops: float  # routed traffic volume x distance (minimize)
     energy_uj: float        # per-inference total, for the report
     adc_share: float = 0.0  # ADC fraction of total (precision-aware scoring)
+    #: interposer-level byte-hops (routed, functional-execution view);
+    #: 0 on a single-mesh mapping — the chiplet Pareto-shift axis
+    noi_byte_hops: float = 0.0
     # robustness axes (None unless the search ran with an accuracy_fn —
     # a NaN sentinel would break Score equality): top-1 agreement vs the
     # float32 forward, nominal and Monte-Carlo mean under the sweep's
@@ -58,6 +62,7 @@ class Score:
             "total_byte_hops": self.total_byte_hops,
             "energy_uj": self.energy_uj,
             "adc_share": self.adc_share,
+            "noi_byte_hops": self.noi_byte_hops,
             "acc_nominal": self.acc_nominal,
             "acc_noisy": self.acc_noisy,
         }
@@ -118,6 +123,7 @@ def evaluate(cnn: CNNConfig, built: Built,
             total_byte_hops=byte_hops,
             energy_uj=rep.e_total * 1e6,
             adc_share=rep.adc_share,
+            noi_byte_hops=float(rep.routed_byte_hops.get(NOI, 0)),
             acc_nominal=acc_nom,
             acc_noisy=acc_noisy,
         ))

@@ -6,7 +6,11 @@ paper's Fig. 7 knobs), plus optional per-layer duplication overrides —
 and, for the robustness DSE, bit-scalable precision: a network-wide
 ``base_bits = (w_bits, a_bits, adc_bits)`` with optional per-layer
 ``precision`` overrides (the Princeton bit-scalable-CIM lever, threaded
-to ``CIMEngine.set_layer_spec`` via :func:`layer_specs_for`).
+to ``CIMEngine.set_layer_spec`` via :func:`layer_specs_for`).  Chiplet
+scale-out adds a chiplet-count x NoI-topology x inter-chiplet-cut axis:
+``chiplets > 1`` builds through :func:`repro.core.noc.shard_network`
+onto a two-level :class:`~repro.core.noc.ChipletFabric` (snake curves
+per chiplet; the aspect knob sizes each chiplet's mesh).
 :class:`DesignSpace` enumerates the grid of points and *builds* them —
 ``plan_network`` is the feasibility oracle (a config whose plan fails to
 build, whose tiles don't fit the mesh, or whose placement violates the
@@ -22,7 +26,7 @@ from typing import Dict, Iterator, Optional, Tuple
 
 from repro.configs.cnn import CNNConfig, ConvLayer
 from repro.core.mapping import MAX_DUPLICATION, NetworkPlan, plan_network
-from repro.core.noc import Placement
+from repro.core.noc import Placement, shard_network
 from repro.dse.placements import (
     PlacementStrategy,
     strategies,
@@ -48,12 +52,19 @@ class MappingConfig:
     base_bits: BitsTriple = (8, 8, 8)
     #: per-layer (w, a, adc) overrides, sorted name order
     precision: Tuple[Tuple[str, BitsTriple], ...] = ()
+    #: chiplet scale-out: >1 shards the plan over a ChipletFabric
+    chiplets: int = 1
+    noi: str = "mesh"            # NoI topology name (chiplets > 1 only)
+    cut: str = "balance"         # stage-boundary partition ("balance"/"even")
 
     def describe(self) -> str:
         bits = [self.strategy, f"aspect={self.aspect:g}",
                 f"reuse={self.reuse}", f"dup_cap={self.dup_cap}"]
         if self.strategy == "boustrophedon":
             bits.append(f"band={self.band}")
+        if self.chiplets > 1:
+            bits.append(f"chiplets={self.chiplets} noi={self.noi} "
+                        f"cut={self.cut}")
         if self.dup_overrides:
             bits.append("dups={" + ",".join(
                 f"{n}:{v}" for n, v in self.dup_overrides) + "}")
@@ -120,7 +131,10 @@ class DesignSpace:
                  bands: Tuple[int, ...] = (2, 3),
                  n_c: int = 256, n_m: int = 256,
                  base_bits_choices: Tuple[BitsTriple, ...] = ((8, 8, 8),),
-                 layer_bits_choices: Tuple[BitsTriple, ...] = ()):
+                 layer_bits_choices: Tuple[BitsTriple, ...] = (),
+                 chiplet_counts: Tuple[int, ...] = (1,),
+                 noi_names: Tuple[str, ...] = ("mesh",),
+                 cuts: Tuple[str, ...] = ("balance",)):
         self.cnn = cnn
         self.strategy_names = strategy_names
         self.aspects = aspects
@@ -128,6 +142,12 @@ class DesignSpace:
         self.dup_caps = dup_caps
         self.bands = bands
         self.n_c, self.n_m = n_c, n_m
+        #: chiplet scale-out axis; counts > 1 shard through
+        #: ``shard_network`` (snake curves per chiplet), so they pair
+        #: only with the snake strategy — other curves stay single-mesh
+        self.chiplet_counts = chiplet_counts
+        self.noi_names = noi_names
+        self.cuts = cuts
         #: network-wide precision grid (enumerated); (8,8,8) is nominal
         self.base_bits_choices = base_bits_choices
         #: per-layer precision override values (mutation-only, like
@@ -141,22 +161,38 @@ class DesignSpace:
 
     # -- enumeration --------------------------------------------------------
 
+    def _fabric_variants(self, strat: str) -> Iterator[Dict[str, object]]:
+        """The chiplet-axis kwargs each mapping point fans out to: the
+        single-mesh point for ``chiplets == 1``, and (snake only — each
+        chiplet carries its own snake curve) every NoI topology x cut
+        for each multi-chiplet count."""
+        for ch in self.chiplet_counts:
+            if ch == 1:
+                yield {}
+            elif strat == "snake":
+                for noi, cut in itertools.product(self.noi_names,
+                                                  self.cuts):
+                    yield {"chiplets": ch, "noi": noi, "cut": cut}
+
     def configs(self) -> Iterator[MappingConfig]:
         for strat, aspect, reuse, cap, bb in itertools.product(
                 self.strategy_names, self.aspects, self.reuses,
                 self.dup_caps, self.base_bits_choices):
-            if strat == "boustrophedon":
-                for band in self.bands:
+            bands = self.bands if strat == "boustrophedon" \
+                else (MappingConfig.band,)
+            for band in bands:
+                for fab in self._fabric_variants(strat):
                     yield MappingConfig(strategy=strat, aspect=aspect,
-                                        reuse=reuse, dup_cap=cap, band=band,
-                                        base_bits=bb)
-            else:
-                yield MappingConfig(strategy=strat, aspect=aspect,
-                                    reuse=reuse, dup_cap=cap, base_bits=bb)
+                                        reuse=reuse, dup_cap=cap,
+                                        band=band, base_bits=bb, **fab)
 
     @property
     def size(self) -> int:
-        n_strat = sum(len(self.bands) if s == "boustrophedon" else 1
+        multi = sum(len(self.noi_names) * len(self.cuts)
+                    for ch in self.chiplet_counts if ch > 1)
+        single = sum(1 for ch in self.chiplet_counts if ch == 1)
+        n_strat = sum((len(self.bands) if s == "boustrophedon" else 1)
+                      * (single + (multi if s == "snake" else 0))
                       for s in self.strategy_names)
         return n_strat * len(self.aspects) * len(self.reuses) \
             * len(self.dup_caps) * len(self.base_bits_choices)
@@ -169,7 +205,11 @@ class DesignSpace:
         ``band`` only exists for the boustrophedon strategy — it is
         never mutated elsewhere, and leaving boustrophedon resets it to
         the dataclass default, so configs differing only in a dead knob
-        can't burn annealing budget as fake neighbors."""
+        can't burn annealing budget as fake neighbors.  The chiplet
+        knobs follow the same discipline: ``noi``/``cut`` mutate only
+        while ``chiplets > 1``, dropping back to one chiplet (or leaving
+        the snake strategy, which multi-chiplet sharding requires)
+        resets them to the dataclass defaults."""
         knobs = ["strategy", "aspect", "reuse", "dup_cap", "dup_override"]
         if cfg.strategy == "boustrophedon":
             knobs.append("band")
@@ -177,7 +217,26 @@ class DesignSpace:
             knobs.append("base_bits")
         if self.layer_bits_choices:
             knobs.append("layer_bits")
+        if len(self.chiplet_counts) > 1:
+            knobs.append("chiplets")
+        if cfg.chiplets > 1:
+            if len(self.noi_names) > 1:
+                knobs.append("noi")
+            if len(self.cuts) > 1:
+                knobs.append("cut")
         knob = rng.choice(knobs)
+        if knob == "chiplets":
+            ch = rng.choice(self.chiplet_counts)
+            if ch == 1:
+                return replace(cfg, chiplets=1, noi=MappingConfig.noi,
+                               cut=MappingConfig.cut)
+            # multi-chiplet sharding is snake-per-chiplet by construction
+            return replace(cfg, chiplets=ch, strategy="snake",
+                           band=MappingConfig.band)
+        if knob == "noi":
+            return replace(cfg, noi=rng.choice(self.noi_names))
+        if knob == "cut":
+            return replace(cfg, cut=rng.choice(self.cuts))
         if knob == "base_bits":
             return replace(cfg,
                            base_bits=rng.choice(self.base_bits_choices))
@@ -195,7 +254,11 @@ class DesignSpace:
             strat = rng.choice(self.strategy_names)
             band = cfg.band if strat == "boustrophedon" \
                 else MappingConfig.band
-            return replace(cfg, strategy=strat, band=band)
+            out = replace(cfg, strategy=strat, band=band)
+            if strat != "snake" and cfg.chiplets > 1:
+                out = replace(out, chiplets=1, noi=MappingConfig.noi,
+                              cut=MappingConfig.cut)
+            return out
         if knob == "aspect":
             return replace(cfg, aspect=rng.choice(self.aspects))
         if knob == "reuse":
@@ -222,12 +285,18 @@ class DesignSpace:
         return by_band[cfg.strategy]
 
     def build(self, cfg: MappingConfig) -> Optional[Built]:
+        if cfg.chiplets > 1 and cfg.strategy != "snake":
+            return None  # sharding is snake-per-chiplet by construction
         try:
             plan = plan_network(self.cnn, n_c=self.n_c, n_m=self.n_m,
                                 reuse=cfg.reuse, dup_cap=cfg.dup_cap,
                                 dup_overrides=dict(cfg.dup_overrides))
-            rows, cols = mesh_shape_for(plan.total_tiles, cfg.aspect)
-            placement = self.strategy(cfg).place(plan, rows, cols)
+            if cfg.chiplets > 1:
+                placement = shard_network(plan, cfg.chiplets, noi=cfg.noi,
+                                          aspect=cfg.aspect, cut=cfg.cut)
+            else:
+                rows, cols = mesh_shape_for(plan.total_tiles, cfg.aspect)
+                placement = self.strategy(cfg).place(plan, rows, cols)
         except (ValueError, NotImplementedError):
             return None
         if validate_placement(plan, placement):

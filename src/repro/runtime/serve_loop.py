@@ -296,7 +296,8 @@ class StreamServeReport:
                 for q in qs}
 
 
-def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
+def build_stream_sim(cnn, params: Dict[str, Any], engine=None,
+                     chiplets: int = 1, noi: str = "mesh", **kw):
     """Serving-side constructor for the streaming simulator.
 
     Wires the quantized-weights serving route end-to-end: params carrying
@@ -306,6 +307,13 @@ def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
     engine.  Pass ``engine=`` to override (e.g. ``"pallas"``), or
     dequantize explicitly with :func:`dequantize_params` to serve a
     quantized checkpoint on the exact engine.
+
+    ``chiplets > 1`` serves the model sharded over a two-level
+    :class:`~repro.core.noc.ChipletFabric` (``noi`` names the interposer
+    topology): the plan is cut at stage boundaries via
+    :func:`~repro.core.noc.shard_network` and streamed OFM hand-offs
+    between chiplets cross the NoI as ordinary routed transport traffic.
+    An explicit ``placement=`` kwarg wins over these convenience knobs.
 
     Because this builds on ``backend="trace"``, quantized serving gets
     the fused integer-native lowering (``core/trace.py``) automatically:
@@ -317,6 +325,18 @@ def build_stream_sim(cnn, params: Dict[str, Any], engine=None, **kw):
     if engine is None:
         quantized = any(_is_q_leaf(v) for v in params.values())
         engine = "cim" if quantized else "exact"
+    if chiplets > 1 and "placement" not in kw:
+        from repro.core.mapping import plan_network
+        from repro.core.noc import shard_network
+
+        # mirror NetworkSimulator's own planning defaults so the sharded
+        # placement's block spans match the simulator's plan exactly
+        plan = plan_network(cnn, n_c=kw.get("n_c", 256),
+                            n_m=kw.get("n_m", 256),
+                            reuse=kw.get("reuse", 1),
+                            dup_cap=kw.get("dup_cap", 64),
+                            dup_overrides=kw.get("dup_overrides") or {})
+        kw["placement"] = shard_network(plan, chiplets, noi=noi)
     return NetworkSimulator(cnn, params, backend="trace", streaming=True,
                             engine=engine, **kw)
 

@@ -54,16 +54,29 @@ def cmd_heatmap(args) -> int:
     from repro.telemetry.heatmap import check_conservation, record_run
 
     cnn, params, rng = _bench_model(args.model, args.seed)
+    kw = {}
+    if args.chiplets > 1:
+        # shard over a two-level fabric: the heatmap's geometry then
+        # flows from the placement's ChipletFabric (per-chiplet grids
+        # side by side, NoI links annotated) instead of a hardcoded
+        # flat mesh
+        from repro.core.mapping import plan_network
+        from repro.core.noc import shard_network
+
+        plan = plan_network(cnn, dup_cap=_dup_cap(args.model))
+        kw["placement"] = shard_network(plan, args.chiplets, noi=args.noi)
     sim = NetworkSimulator(cnn, params, backend="trace",
-                           dup_cap=_dup_cap(args.model))
+                           dup_cap=_dup_cap(args.model), **kw)
     x = rng.random((1, cnn.input_hw, cnn.input_hw, 3))
     res, rec = record_run(sim, x)
     hm = rec.heatmap()
     analytic = routed_byte_hops_per_class(cnn, sim.plan, sim.placement)
     problems = check_conservation(hm, res.traffic, analytic,
                                   flows=rec.flows.values())
+    fabric = f"{args.chiplets}-chiplet fabric (noi {args.noi})" \
+        if args.chiplets > 1 else "mesh"
     print(f"{args.model}: {sim.plan.total_tiles} tiles on "
-          f"{hm.rows}x{hm.cols} mesh")
+          f"{hm.rows}x{hm.cols} {fabric}")
     totals = hm.class_totals()
     for kind in sorted(totals):
         print(f"  {kind:>9}: {totals[kind]:>12} byte-hops over "
@@ -174,6 +187,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     hp.add_argument("--seed", type=int, default=0)
     hp.add_argument("--top", type=int, default=10)
     hp.add_argument("--csv", help="also write per-link loads as CSV")
+    hp.add_argument("--chiplets", type=int, default=1,
+                    help="shard over an N-chiplet fabric (default: flat "
+                         "single mesh)")
+    hp.add_argument("--noi", default="mesh", choices=("mesh", "floret"),
+                    help="NoI topology for --chiplets > 1")
 
     tp = sub.add_parser("trace", help="capture a Chrome trace of a "
                                       "streaming serve")

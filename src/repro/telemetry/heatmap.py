@@ -24,10 +24,11 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 from repro.core.noc import MeshNoC
-from repro.core.transport import CHAIN, GROUP, OFM, RESIDUAL, SPLIT
+from repro.core.transport import CHAIN, GROUP, NOI, OFM, RESIDUAL, SPLIT
 
-#: routed packet classes, in rendering order
-TRAFFIC_CLASSES: Tuple[str, ...] = (CHAIN, GROUP, SPLIT, OFM, RESIDUAL)
+#: routed packet classes, in rendering order ("noi" is the interposer
+#: *level* of cross-chiplet flows on a ChipletFabric, not a dataflow)
+TRAFFIC_CLASSES: Tuple[str, ...] = (CHAIN, GROUP, SPLIT, OFM, RESIDUAL, NOI)
 
 Link = Tuple[Tuple[int, int], Tuple[int, int]]  # ((r, c) -> (r, c))
 
@@ -52,13 +53,18 @@ class LinkRecorder:
 
     def __init__(self, noc: MeshNoC):
         self.noc = noc
+        # ChipletFabric routes cross interposer links; those are credited
+        # under the "noi" class so per-class link sums stay per-level
+        # exact (a flat MeshNoC has no is_noi_link: every link is mesh)
+        self._is_noi = getattr(noc, "is_noi_link", None)
         self.flows: Dict[Tuple[int, int, str], FlowStats] = {}
         self.link_bytes: Dict[str, Dict[Link, int]] = {}
 
     def record(self, src: int, dst: int, kind: str, nbytes: int,
                count: int, hops: int) -> None:
         """One accounting record: ``count`` packets of ``nbytes`` from
-        global tile ``src`` to ``dst`` over ``hops`` mesh hops."""
+        global tile ``src`` to ``dst`` over ``hops`` total hops (both
+        levels on a fabric)."""
         total = nbytes * count
         fs = self.flows.get((src, dst, kind))
         if fs is None:
@@ -66,11 +72,13 @@ class LinkRecorder:
         fs.packets += count
         fs.bytes += total
         fs.byte_hops += total * hops
-        per_class = self.link_bytes.get(kind)
-        if per_class is None:
-            per_class = self.link_bytes[kind] = {}
         path = self.noc.route(src, dst)
         for u, v in zip(path, path[1:]):
+            k = NOI if (self._is_noi is not None
+                        and self._is_noi(u, v)) else kind
+            per_class = self.link_bytes.get(k)
+            if per_class is None:
+                per_class = self.link_bytes[k] = {}
             per_class[(u, v)] = per_class.get((u, v), 0) + total
 
     def clear(self) -> None:
@@ -78,17 +86,24 @@ class LinkRecorder:
         self.link_bytes.clear()
 
     def heatmap(self) -> "LinkHeatmap":
+        geom = getattr(self.noc, "fabric_geometry", None)
         return LinkHeatmap(
             rows=self.noc.rows, cols=self.noc.cols,
-            per_class={k: dict(v) for k, v in self.link_bytes.items()})
+            per_class={k: dict(v) for k, v in self.link_bytes.items()},
+            geometry=geom() if geom is not None else None)
 
 
 @dataclass
 class LinkHeatmap:
-    """Per-link byte loads on a rows x cols mesh, split by class."""
+    """Per-link byte loads on a rows x cols grid, split by class.
+
+    ``geometry`` (``ChipletFabric.fabric_geometry()``) marks the
+    per-chiplet bounding boxes, gateway cells and NoI links of a
+    two-level fabric; ``None`` renders the flat single-mesh view."""
     rows: int
     cols: int
     per_class: Dict[str, Dict[Link, int]] = field(default_factory=dict)
+    geometry: Optional[Dict[str, object]] = None
 
     def class_totals(self) -> Dict[str, int]:
         """Sum of link loads per class == per-class byte-hops."""
@@ -121,12 +136,40 @@ class LinkHeatmap:
         return "\n".join(lines) + "\n"
 
     def render(self) -> str:
-        """Text heatmap of the mesh: cells are ``+``; the glyph between
-        / below cells scales 0-9 with the bidirectional link load."""
+        """Text heatmap: cells are ``+``; the glyph between / below
+        cells scales 0-9 with the bidirectional link load.  On a
+        multi-chiplet fabric the per-chiplet grids render side by side
+        (gateway cells marked ``G``) with the NoI links listed below —
+        they span the interposer, not a drawable grid edge."""
         comb = self.combined()
         if not comb:
             return "(no recorded traffic)\n"
 
+        geom = self.geometry
+        boxes = list(geom["boxes"]) if geom is not None else []
+        if len(boxes) <= 1:
+            return self._render_grid(
+                comb, f"mesh {self.rows}x{self.cols}",
+                cells={(r, c) for r in range(self.rows)
+                       for c in range(self.cols)})
+
+        cells = {(r0 + r, c0 + c)
+                 for r0, c0, nr, nc in boxes
+                 for r in range(nr) for c in range(nc)}
+        gateways = set(geom["gateways"])
+        noi_links = list(geom["noi_links"])
+        shapes = " + ".join(f"{nr}x{nc}" for _r0, _c0, nr, nc in boxes)
+        body = self._render_grid(
+            comb, f"fabric {len(boxes)} chiplets ({shapes}), "
+            f"noi {geom['noi_name']}", cells=cells, gateways=gateways)
+        lines = [body.rstrip("\n"), "NoI links (G <-> G, bidirectional):"]
+        for u, v in noi_links:
+            b = comb.get((u, v), 0) + comb.get((v, u), 0)
+            lines.append(f"  {u} <-> {v}: {b} B")
+        return "\n".join(lines) + "\n"
+
+    def _render_grid(self, comb: Dict[Link, int], title: str,
+                     cells: set, gateways: Optional[set] = None) -> str:
         def load(a: Tuple[int, int], b: Tuple[int, int]) -> int:
             return comb.get((a, b), 0) + comb.get((b, a), 0)
 
@@ -137,18 +180,24 @@ class LinkHeatmap:
                 return "."
             return str(min(9, 1 + (9 * x) // (peak + 1)))
 
-        lines = [f"mesh {self.rows}x{self.cols}; glyphs scale 0-9 with "
-                 f"link load (peak {peak} B, bidirectional)"]
+        gws = gateways or set()
+        lines = [f"{title}; glyphs scale 0-9 with link load "
+                 f"(peak {peak} B, bidirectional)"]
         for r in range(self.rows):
             row = []
             for c in range(self.cols):
-                row.append("+")
+                if (r, c) not in cells:
+                    row.append("  " if c + 1 < self.cols else " ")
+                    continue
+                row.append("G" if (r, c) in gws else "+")
                 if c + 1 < self.cols:
-                    row.append(glyph(load((r, c), (r, c + 1))))
-            lines.append("".join(row))
+                    row.append(glyph(load((r, c), (r, c + 1)))
+                               if (r, c + 1) in cells else " ")
+            lines.append("".join(row).rstrip())
             if r + 1 < self.rows:
                 lines.append("".join(
-                    glyph(load((r, c), (r + 1, c))) + " "
+                    (glyph(load((r, c), (r + 1, c)))
+                     if (r, c) in cells and (r + 1, c) in cells else " ") + " "
                     for c in range(self.cols)).rstrip())
         return "\n".join(lines) + "\n"
 
@@ -168,6 +217,15 @@ def check_conservation(heatmap: LinkHeatmap, counters,
     simulator's :class:`TrafficCounters` byte-hop totals, and (when
     given) the analytic per-class routed byte-hops from
     ``repro.core.energy.routed_byte_hops_per_class``.
+
+    On a :class:`~repro.core.noc.ChipletFabric` this is a per-*level*
+    assertion, not just the flat total: all three views account a
+    cross-chiplet flow's intra-mesh hops under its own class and its
+    interposer hops under the ``"noi"`` class (the recorder credits NoI
+    links there, the transport splits via ``hop_levels``, the analytic
+    walk mirrors it), so the sim == energy == heatmap equality is
+    checked for the intra-mesh classes AND the NoI level separately —
+    each as exact integers.
     """
     problems: List[str] = []
     hm = heatmap.class_totals()

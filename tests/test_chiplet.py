@@ -1,0 +1,287 @@
+"""Two-level ChipletFabric: degenerate 1x1 bitwise identity with the
+flat mesh, per-level (intra-mesh AND NoI) three-way conservation on
+multi-chiplet shards, stage-boundary partitioning, fabric geometry and
+routing, the DSE chiplet axis, and streamed serving across the NoI."""
+import numpy as np
+import pytest
+
+from repro.configs.cnn import CNN_BENCHMARKS
+from repro.core.energy import analyze_plan, routed_byte_hops_per_class
+from repro.core.mapping import plan_network
+from repro.core.network import NetworkSimulator
+from repro.core.noc import (
+    ChipletFabric,
+    MeshNoC,
+    load_noi,
+    partition_layers,
+    place_network,
+    shard_network,
+)
+from repro.core.transport import NOI
+from repro.telemetry.heatmap import check_conservation, record_run
+
+from conftest import int_params
+
+
+# ---------------------------------------------------------------------------
+# Degenerate 1x1 fabric == flat mesh, bitwise on every view
+# ---------------------------------------------------------------------------
+
+
+def test_1x1_fabric_bitwise_identical_to_flat_mesh():
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = int_params(cnn, rng)
+    x = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+
+    flat = NetworkSimulator(cnn, params, backend="trace")
+    fab = NetworkSimulator(cnn, params, backend="trace",
+                           placement=shard_network(flat.plan, 1))
+    assert isinstance(fab.placement.noc, ChipletFabric)
+    assert fab.placement.noc.order is None  # snake fast path preserved
+
+    flat_res, flat_rec = record_run(flat, x)
+    fab_res, fab_rec = record_run(fab, x)
+    # logits
+    assert flat_res.logits.tobytes() == fab_res.logits.tobytes()
+    # traffic counters (dict-identical: no "noi" key appears)
+    assert dict(flat_res.traffic.byte_hops) == dict(fab_res.traffic.byte_hops)
+    assert dict(flat_res.traffic.packets) == dict(fab_res.traffic.packets)
+    assert dict(flat_res.traffic.hops) == dict(fab_res.traffic.hops)
+    assert NOI not in fab_res.traffic.byte_hops
+    # energy report (every term, including e_noi == 0)
+    flat_rep = analyze_plan(cnn, flat.plan, placement=flat.placement)
+    fab_rep = analyze_plan(cnn, fab.plan, placement=fab.placement)
+    assert fab_rep.e_noi == 0.0
+    assert flat_rep.breakdown() == fab_rep.breakdown()
+    assert flat_rep.routed_byte_hops == fab_rep.routed_byte_hops
+    # heatmap: identical per-class link loads AND identical rendering
+    assert flat_rec.heatmap().per_class == fab_rec.heatmap().per_class
+    assert flat_rec.heatmap().render() == fab_rec.heatmap().render()
+
+
+def test_1x1_fabric_analytic_identity_all_models():
+    """The analytic side of the bitwise invariant on every benchmark
+    model (cheap: no simulation) — energy breakdown and per-class
+    routed byte-hops equal to the flat mesh exactly."""
+    for name in CNN_BENCHMARKS:
+        cnn = CNN_BENCHMARKS[name]()
+        dup_cap = 128 if name == "resnet50-imagenet" else 64
+        plan = plan_network(cnn, dup_cap=dup_cap)
+        flat = analyze_plan(cnn, plan, placement=place_network(plan))
+        fab = analyze_plan(cnn, plan, placement=shard_network(plan, 1))
+        assert flat.breakdown() == fab.breakdown(), name
+        assert flat.routed_byte_hops == fab.routed_byte_hops, name
+
+
+# ---------------------------------------------------------------------------
+# Multi-chiplet shard: per-level exact-integer conservation
+# ---------------------------------------------------------------------------
+
+
+def test_2chiplet_resnet18_per_level_conservation():
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
+    params = int_params(cnn, rng)
+    x = rng.integers(0, 2, (1, 32, 32, 3)).astype(np.float64)
+    plan = plan_network(cnn, dup_cap=64)
+    sim = NetworkSimulator(cnn, params, backend="trace",
+                           placement=shard_network(plan, 2))
+    res, rec = record_run(sim, x)
+
+    # the interposer level is genuinely exercised...
+    noi_bh = int(res.traffic.byte_hops.get(NOI, 0))
+    assert noi_bh > 0
+    # ...and all three views agree per class — which on a fabric is per
+    # *level*: intra-mesh classes and the "noi" class separately, as
+    # exact integers
+    analytic = routed_byte_hops_per_class(cnn, sim.plan, sim.placement)
+    assert analytic[NOI] == noi_bh
+    problems = check_conservation(rec.heatmap(), res.traffic, analytic,
+                                  flows=rec.flows.values())
+    assert problems == []
+    # heatmap credits the NoI links under the "noi" class exactly
+    assert rec.heatmap().class_totals()[NOI] == noi_bh
+    # the interposer energy term is charged and distinct
+    rep = analyze_plan(cnn, plan, placement=shard_network(plan, 2))
+    assert rep.e_noi > 0.0
+    # logits don't care where tiles live: bitwise vs the flat mesh
+    flat = NetworkSimulator(cnn, params, backend="trace").run(x)
+    assert res.logits.tobytes() == flat.logits.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Stage-boundary partitioning and sharded placement structure
+# ---------------------------------------------------------------------------
+
+
+def test_partition_layers_contiguous_and_sc_safe():
+    cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
+    plan = plan_network(cnn, dup_cap=64)
+    names = [lp.name for lp in plan.layers]
+    for cut in ("balance", "even"):
+        for chiplets in (2, 3, 4):
+            segs = partition_layers(plan, chiplets, cut=cut)
+            assert len(segs) == chiplets
+            assert segs[0][0] == 0 and segs[-1][1] == len(plan.layers) - 1
+            for (a0, a1), (b0, b1) in zip(segs, segs[1:]):
+                assert b0 == a1 + 1  # contiguous cover
+                # a cut never lands before a *_sc projection: the pair
+                # executes inside one stage, so it stays on one chiplet
+                assert not names[b0].endswith("_sc")
+
+
+def test_partition_layers_balance_minimizes_max_segment():
+    cnn = CNN_BENCHMARKS["resnet18-cifar10"]()
+    plan = plan_network(cnn, dup_cap=64)
+    tiles = [lp.total_tiles for lp in plan.layers]
+
+    def seg_tiles(segs):
+        return [sum(tiles[a:b + 1]) for a, b in segs]
+
+    bal = max(seg_tiles(partition_layers(plan, 3, cut="balance")))
+    ev = max(seg_tiles(partition_layers(plan, 3, cut="even")))
+    assert bal <= ev
+
+    with pytest.raises(ValueError):
+        partition_layers(plan, 0)
+    with pytest.raises(ValueError):
+        partition_layers(plan, len(plan.layers) + 1)
+
+
+def test_shard_network_structure():
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    plan = plan_network(cnn)
+    flat = place_network(plan)
+    for chiplets, noi in ((2, "mesh"), (3, "floret")):
+        placed = shard_network(plan, chiplets, noi=noi)
+        fabric = placed.noc
+        assert isinstance(fabric, ChipletFabric)
+        assert len(fabric.chiplets) == chiplets
+        assert all(isinstance(m, MeshNoC) for m in fabric.chiplets)
+        assert fabric.num_tiles == plan.total_tiles
+        # block spans are the flat plan's spans: global ids concatenate
+        # the chiplets' assigned ranges (NetworkSimulator enforces this)
+        assert placed.block_start == flat.block_start
+        assert placed.block_end == flat.block_end
+        # blocks never span chiplets
+        for li in range(len(plan.layers)):
+            start, end = placed.block_start[li], placed.block_end[li]
+            owners = {fabric.tile_chiplet(t)[0] for t in range(start, end)}
+            assert len(owners) == 1, f"layer {li} spans chiplets {owners}"
+        # global coordinates are disjoint across chiplets
+        coords = [fabric.coord(t) for t in range(fabric.num_tiles)]
+        assert len(set(coords)) == len(coords)
+
+
+def test_fabric_routing_and_hop_levels():
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    plan = plan_network(cnn)
+    fabric = shard_network(plan, 2).noc
+    k0_end = fabric.counts[0]
+    a, b = 3, k0_end + 5       # chiplet 0 tile -> chiplet 1 tile
+    h_mesh, h_noi = fabric.hop_levels(a, b)
+    assert h_noi == fabric.noi.hops(0, 1) > 0
+    path = fabric.route(a, b)
+    assert path[0] == fabric.coord(a) and path[-1] == fabric.coord(b)
+    assert len(path) - 1 == h_mesh + h_noi == fabric.hops(a, b)
+    # the route crosses both gateways, and exactly the NoI links are
+    # classified as interposer links
+    gw0, gw1 = fabric.gateway(0), fabric.gateway(1)
+    assert gw0 in path and gw1 in path
+    noi_links = [(u, v) for u, v in zip(path, path[1:])
+                 if fabric.is_noi_link(u, v)]
+    assert len(noi_links) == h_noi
+    assert noi_links == [(gw0, gw1)]
+    # same-chiplet pairs never touch the interposer
+    assert fabric.hop_levels(a, a + 1)[1] == 0
+    assert fabric.hop_levels(a, a)[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# DSE chiplet axis
+# ---------------------------------------------------------------------------
+
+
+def test_dse_chiplet_axis():
+    from repro.dse.search import evaluate
+    from repro.dse.space import DesignSpace
+
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    space = DesignSpace(cnn, strategy_names=("snake", "hilbert"),
+                        aspects=(1.0,), reuses=(1,), dup_caps=(64,),
+                        chiplet_counts=(1, 2), noi_names=("mesh", "floret"),
+                        cuts=("balance",))
+    cfgs = list(space.configs())
+    assert space.size == len(cfgs) == 2 + 2  # 2 strategies flat + snake x 2 noi
+    multi = [c for c in cfgs if c.chiplets > 1]
+    assert multi and all(c.strategy == "snake" for c in multi)
+    assert "chiplets=2" in multi[0].describe()
+
+    # multi-chiplet configs build on a fabric and score a nonzero NoI axis
+    built = space.build(multi[0])
+    assert built is not None
+    assert isinstance(built.placement.noc, ChipletFabric)
+    cand = evaluate(cnn, built)
+    assert cand.score.noi_byte_hops > 0
+    assert "noi_byte_hops" in cand.score.as_dict()
+
+    # single-mesh configs report a zero NoI axis
+    flat_cfg = next(c for c in cfgs if c.chiplets == 1
+                    and c.strategy == "snake")
+    assert evaluate(cnn, space.build(flat_cfg)).score.noi_byte_hops == 0
+
+    # non-snake multi-chiplet points are infeasible by construction
+    import dataclasses
+    bad = dataclasses.replace(multi[0], strategy="hilbert")
+    assert space.build(bad) is None
+
+
+def test_dse_mutation_keeps_chiplet_knobs_live_and_dead_knobs_reset():
+    import random
+
+    from repro.dse.space import DesignSpace, MappingConfig
+
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    space = DesignSpace(cnn, strategy_names=("snake", "hilbert"),
+                        aspects=(1.0,), reuses=(1,), dup_caps=(64,),
+                        chiplet_counts=(1, 2, 4),
+                        noi_names=("mesh", "floret"), cuts=("balance",
+                                                            "even"))
+    rng = random.Random(0)
+    cfg = MappingConfig(strategy="snake", dup_cap=64)
+    visited = set()
+    for _ in range(300):
+        cfg = space.mutate(cfg, rng)
+        # invariants: multi-chiplet implies snake; single-chiplet resets
+        # the noi/cut knobs to defaults (no fake annealing neighbors)
+        assert not (cfg.chiplets > 1 and cfg.strategy != "snake")
+        if cfg.chiplets == 1:
+            assert cfg.noi == MappingConfig.noi
+            assert cfg.cut == MappingConfig.cut
+        visited.add(cfg.chiplets)
+    assert visited == {1, 2, 4}
+
+
+# ---------------------------------------------------------------------------
+# Streamed serving across the NoI
+# ---------------------------------------------------------------------------
+
+
+def test_stream_serving_across_noi_bitwise():
+    from repro.runtime.serve_loop import build_stream_sim
+
+    rng = np.random.default_rng(0)
+    cnn = CNN_BENCHMARKS["vgg11-cifar10"]()
+    params = int_params(cnn, rng)
+    frames = rng.integers(0, 2, (2, 32, 32, 3)).astype(np.float64)
+
+    sim = build_stream_sim(cnn, params, chiplets=2)
+    assert isinstance(sim.placement.noc, ChipletFabric)
+    res = sim.run_stream(frames)
+    # streamed OFM hand-offs cross the NoI as ordinary routed traffic
+    noi_bh = sum(int(ft.byte_hops.get(NOI, 0)) for ft in res.frame_traffic)
+    assert noi_bh > 0
+    # and the math is untouched: bitwise vs the sequential flat mesh
+    flat = build_stream_sim(cnn, params).run(frames)
+    assert res.logits.tobytes() == flat.logits.tobytes()
