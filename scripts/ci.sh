@@ -14,7 +14,10 @@ python -m pytest -x -q -m "not slow"
 python -m benchmarks.run --check-regress
 # bounded streaming smoke: 4 fixed-seed vgg11 frames through the
 # pipelined executor; exits non-zero on any per-frame bitwise mismatch
-# vs the sequential trace run or a measured-vs-analytic II disagreement
+# vs the sequential trace run, a measured-vs-analytic II disagreement,
+# or any drift (logits, per-frame counters/traffic, start/finish
+# timeline, residual-FIFO depth) between the batched numerics+timing
+# split and the per-cell oracle loop
 python -m benchmarks.run --stream-smoke
 # bounded mapping-DSE smoke: tiny fixed-seed space, winners bitwise-
 # validated against the snake baseline (<30 s; exits non-zero on mismatch)

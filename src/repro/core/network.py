@@ -142,7 +142,12 @@ class StreamResult:
     initiation interval is *measured* (``finish`` deltas at the exit
     stage) rather than asserted.  With back-to-back arrivals the measured
     II is throughput-bound (the slowest stage); spaced arrivals make it
-    arrival-bound — the closed-loop serve front-end uses that."""
+    arrival-bound — the closed-loop serve front-end uses that.
+
+    ``measured_ii`` is Optional: a single-frame stream (``T == 1``, the
+    serve loop executing one queued request) has no exit-to-exit spacing
+    to measure, so it reports ``None`` while every other field (timeline,
+    counters, fill latency) stays populated."""
 
     logits: np.ndarray                    # (T, classes), frame-indexed
     frame_counters: List[SimCounters]     # per-frame tile events
@@ -151,10 +156,13 @@ class StreamResult:
     start: np.ndarray                     # (T, S) stage initiation cycles
     finish: np.ndarray                    # (T, S) stage completion cycles
     occupancy: Tuple[int, ...]            # per-stage initiation interval
-    measured_ii: int                      # steady-state exit-to-exit cycles
+    measured_ii: Optional[int]            # steady-state exit-to-exit cycles
     analytic_ii: int                      # plan_network slowest-stage bound
     fill_latency: int                     # frame 0: arrival -> pipeline exit
     residual_fifo_depth: int              # max shortcut frames buffered
+    #: realized numerics micro-batches: frames per batched stage sweep
+    #: (all ones on the per-cell oracle path)
+    batch_sizes: Tuple[int, ...] = ()
 
     @property
     def total_cycles(self) -> int:
@@ -172,12 +180,74 @@ class StreamResult:
 
     def inferences_per_s(self, clock_hz: float = STEP_CLOCK_HZ) -> float:
         """Measured steady-state throughput at the Tab. 3 step clock."""
+        if self.measured_ii is None:
+            raise ValueError(
+                "a single-frame stream has no measured initiation "
+                "interval (measured_ii is None) — throughput needs T >= 2")
         return clock_hz / self.measured_ii
 
 
 def _is_shortcut(layer) -> bool:
     """The config convention for ResNet projection shortcuts."""
     return isinstance(layer, ConvLayer) and layer.name.endswith("_sc")
+
+
+#: default numerics micro-batch for the batched streaming path: frames
+#: per stage-major sweep (bounds the working set; chunk boundaries
+#: cannot change a bit — see ``run_stream``)
+DEFAULT_STREAM_CHUNK = 16
+
+
+def stream_timeline(arrivals: np.ndarray, occupancy, latency
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """The wavefront timing recurrence, vectorized over frames.
+
+    The per-cell streaming executor computes, cell by cell::
+
+        ready[t]      = finish[t, k-1] if k else arrivals[t]
+        start[t, k]   = ready[t] if t == 0
+                        else max(ready[t], start[t-1, k] + occ[k])
+        finish[t, k]  = start[t, k] + lat[k]
+
+    For a fixed stage ``k`` the ``start`` recurrence is a max-plus
+    prefix scan; substituting ``g[t] = start[t] - t * occ[k]`` turns it
+    into ``g[t] = max(ready[t] - t * occ[k], g[t-1])`` — a plain running
+    maximum — so one ``np.maximum.accumulate`` per stage replaces the
+    T x S Python loop, bit-identical (integer arithmetic throughout).
+    ``tests/test_streaming.py`` asserts equality against the scalar
+    loop over random arrival vectors."""
+    arr = np.asarray(arrivals, np.int64)
+    t_n, s_n = arr.shape[0], len(occupancy)
+    tidx = np.arange(t_n, dtype=np.int64)
+    start = np.empty((t_n, s_n), np.int64)
+    finish = np.empty((t_n, s_n), np.int64)
+    ready = arr
+    for k in range(s_n):
+        shift = tidx * int(occupancy[k])
+        st = np.maximum.accumulate(ready - shift) + shift
+        start[:, k] = st
+        finish[:, k] = st + int(latency[k])
+        ready = finish[:, k]
+    return start, finish
+
+
+def stream_timeline_scalar(arrivals: np.ndarray, occupancy, latency
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference scalar form of :func:`stream_timeline` — the exact
+    per-cell recurrence the interleaved oracle executes, kept as the
+    differential-test oracle for the vectorized scan."""
+    arr = np.asarray(arrivals, np.int64)
+    t_n, s_n = arr.shape[0], len(occupancy)
+    start = np.zeros((t_n, s_n), np.int64)
+    finish = np.zeros((t_n, s_n), np.int64)
+    for t in range(t_n):
+        for k in range(s_n):
+            ready = finish[t, k - 1] if k else arr[t]
+            init = ready if t == 0 \
+                else max(ready, start[t - 1, k] + occupancy[k])
+            start[t, k] = init
+            finish[t, k] = init + latency[k]
+    return start, finish
 
 
 class NetworkSimulator:
@@ -372,6 +442,26 @@ class NetworkSimulator:
                 "calib_images has no effect on the exact engine")
         self._handles: Dict[int, object] = {}
         self._build_handles()
+        # trace backend: construct every per-stage executor (compiled
+        # closures + scratch) once, here — run/run_stream/serve_stream
+        # calls then only reassign each executor's transport/counters,
+        # so repeated serving on one simulator pays setup exactly once
+        # (asserted via Profiler spans in tests/test_streaming.py)
+        if backend == "trace":
+            self._build_executors()
+
+    def _build_executors(self) -> None:
+        """Eagerly instantiate the per-(layer, strip) trace executors."""
+        sink_t = NoCTransport(self.placement.noc)
+        sink_c = SimCounters()
+        with span(f"executor_build:{self.cnn.name}",
+                  executors=len(self._trace_plans)):
+            for li, sched in enumerate(self.schedules):
+                if sched is not None:
+                    self._executor(li, 0, sched, sink_t, sink_c)
+            for li, strips in self._strips.items():
+                for si, strip in enumerate(strips):
+                    self._executor(li, si, strip.sched, sink_t, sink_c)
 
     def _build_handles(self) -> None:
         """(Re)build every layer's engine handle — the only per-trial
@@ -441,14 +531,19 @@ class NetworkSimulator:
         return ex
 
     def _run_layer(self, li: int, transport: NoCTransport,
-                   counters: SimCounters, x: np.ndarray) -> np.ndarray:
+                   counters: SimCounters, x: np.ndarray,
+                   account: bool = True) -> np.ndarray:
         """Run one conv layer's block — whole, or strip by strip when the
         layer is width-tiled (same chain, per-strip tables, halo columns
-        re-streamed; output strips concatenate along the width)."""
+        re-streamed; output strips concatenate along the width).
+
+        ``account=False`` (trace backend only) computes the math without
+        counters/transport side effects — the streaming numerics pass."""
+        kw = {} if account else {"account": False}
         strips = self._strips.get(li)
         if strips is None:
             return self._executor(li, 0, self.schedules[li], transport,
-                                  counters).run(x)
+                                  counters).run(x, **kw)
         layer = self.cnn.layers[li]
         b, p = x.shape[0], layer.p
         padded = np.zeros((b, layer.h + 2 * p, layer.w + 2 * p, layer.c),
@@ -456,7 +551,7 @@ class NetworkSimulator:
         padded[:, p:p + layer.h, p:p + layer.w] = x
         outs = [
             self._executor(li, si, strip.sched, transport, counters)
-            .run(padded[:, :, strip.lo:strip.hi])
+            .run(padded[:, :, strip.lo:strip.hi], **kw)
             for si, strip in enumerate(strips)
         ]
         return np.concatenate(outs, axis=2)
@@ -517,7 +612,8 @@ class NetworkSimulator:
     def _exec_stage(self, stage: _Stage, x: np.ndarray,
                     saved: Dict[str, Tuple[np.ndarray, Optional[int]]],
                     counters: SimCounters,
-                    traffic: TrafficCounters) -> np.ndarray:
+                    traffic: TrafficCounters,
+                    account: bool = True) -> np.ndarray:
         """Execute one pipeline stage on one (possibly batched) value.
 
         Shared verbatim by the sequential :meth:`run` and the streaming
@@ -526,7 +622,13 @@ class NetworkSimulator:
         holds residual block inputs (name -> (value, producing layer))
         between the ``*_a`` save and the shortcut add; the streaming
         executor keeps one such dict per in-flight frame — the paper's
-        FIFO forwarding across the pipeline skew."""
+        FIFO forwarding across the pipeline skew.
+
+        ``account=False`` computes the math with zero accounting side
+        effects (no counter increments, no transport records, no
+        recorder/link-traffic writes): the batched streaming numerics
+        pass, whose per-frame accounting is replayed analytically by
+        :meth:`_account_stage`."""
         placement = self.placement
         noc = placement.noc
         li = stage.li
@@ -544,16 +646,18 @@ class NetworkSimulator:
             return simulate_fc(
                 x, np.asarray(self.params[layer.name], np.float64),
                 self.n_c, self.n_m, activation=act,
-                counters=counters, transport=transport,
+                counters=counters,
+                transport=transport if account else None,
                 engine=self.pe_engine, handle=self._handles[li])
 
         mesh_root = NoCTransport(noc, base=0, counters=traffic,
                                  recorder=self.recorder)
         if layer.name.endswith("_a"):
             saved[layer.name] = (x, stage.prev_li)  # residual save (Fig. 2)
-        y = self._run_layer(li, transport, counters, x)
+        y = self._run_layer(li, transport, counters, x, account=account)
         if layer.residual_from is not None:
             block_in, block_in_src = saved.pop(layer.residual_from)
+            res_bytes = int(np.prod(block_in.shape[1:]))  # per frame, 8b
             if stage.sc_li is not None:
                 # projection shortcut: its own placed block, driven by
                 # the saved block input
@@ -561,17 +665,22 @@ class NetworkSimulator:
                 sc_tr = NoCTransport(noc, base=placement.block_start[sc_li],
                                      counters=traffic,
                                      recorder=self.recorder)
-                self._record_residual(mesh_root, block_in_src,
-                                      placement.block_start[sc_li], block_in)
-                shortcut = self._run_layer(sc_li, sc_tr, counters, block_in)
-                lp = self.plan.layers[sc_li]
-                mesh_root.record(placement.block_end[sc_li],
-                                 placement.block_end[li], RESIDUAL,
-                                 lp.out_pixels * lp.c_out)
+                if account:
+                    self._record_residual(mesh_root, block_in_src,
+                                          placement.block_start[sc_li],
+                                          res_bytes)
+                shortcut = self._run_layer(sc_li, sc_tr, counters, block_in,
+                                           account=account)
+                if account:
+                    lp = self.plan.layers[sc_li]
+                    mesh_root.record(placement.block_end[sc_li],
+                                     placement.block_end[li], RESIDUAL,
+                                     lp.out_pixels * lp.c_out)
             else:
                 # identity shortcut streams straight to the add
-                self._record_residual(mesh_root, block_in_src,
-                                      placement.block_end[li], block_in)
+                if account:
+                    self._record_residual(mesh_root, block_in_src,
+                                          placement.block_end[li], res_bytes)
                 shortcut = block_in
             # tail adder + activation after the shortcut join
             y = y + shortcut
@@ -610,7 +719,9 @@ class NetworkSimulator:
             counters=counters, traffic=traffic)
 
     def run_stream(self, frames: np.ndarray,
-                   arrivals: Optional[np.ndarray] = None) -> StreamResult:
+                   arrivals: Optional[np.ndarray] = None,
+                   batched: bool = True,
+                   chunk: Optional[int] = None) -> StreamResult:
         """Pipelined stream computing: overlap ``T`` frames across the
         layer pipeline and *measure* the steady-state initiation
         interval from the simulated stage timeline.
@@ -623,10 +734,35 @@ class NetworkSimulator:
         back-pressure-limited, so the measured II is the slowest stage's
         initiation interval — the quantity ``plan_network`` bounds
         analytically (cross-checked via :attr:`StreamResult.analytic_ii`).
+        A single frame is accepted (``measured_ii=None`` — there is no
+        exit spacing to measure).
+
+        Two equal-by-construction execution strategies:
+
+        * ``batched=True`` (default) decouples numerics from timing.
+          The *numerics pass* runs all frames stage-major — stage ``k``
+          consumes the ``(T, ...)`` tensor stage ``k-1`` produced — in
+          micro-batches of ``chunk`` frames (default
+          ``DEFAULT_STREAM_CHUNK``), riding the same batched trace
+          gathers/gemms the sequential :meth:`run` uses.  Bitwise-free:
+          ``gemm_rows`` pads remainder row blocks so a frame's bits
+          never depend on its batch neighbours, hence neither batching
+          nor chunk boundaries can change an OFM bit.  The *timing /
+          accounting pass* is purely analytic: the wavefront recurrence
+          vectorizes over frames (:func:`stream_timeline`), the
+          residual-FIFO depth has a closed form over (save, add) stage
+          pairs, and per-frame counters/transport records replay the
+          same analytic accounting the trace executors emit per frame —
+          every increment is batch- and value-independent, so the replay
+          is bit-identical to interleaved execution.
+        * ``batched=False`` is the per-cell oracle: the original
+          interleaved wavefront loop, one ``_exec_stage`` call per
+          (frame, stage) cell with timing and accounting inline.  The
+          differential suite (``tests/test_streaming.py``,
+          ``--stream-smoke``) holds the batched path bitwise to it.
 
         Per-frame OFMs are bitwise-equal to the sequential trace run of
-        the same frames (the stages execute the same compiled plans in
-        the same association order), and each frame carries its own
+        the same frames on both paths, and each frame carries its own
         ``SimCounters``/``TrafficCounters``.
         """
         if not self.streaming:
@@ -637,9 +773,8 @@ class NetworkSimulator:
         if frames.ndim != 4:
             raise ValueError(f"frames must be (T, H, W, C): {frames.shape}")
         t_n = frames.shape[0]
-        if t_n < 2:
-            raise ValueError(
-                "a steady-state initiation interval needs >= 2 frames")
+        if t_n < 1:
+            raise ValueError("run_stream needs at least one frame")
         stages = self._stages
         s_n = len(stages)
         if arrivals is None:
@@ -656,6 +791,177 @@ class NetworkSimulator:
         self.placement.noc.link_traffic.clear()  # per-stream link stats
         counters = [SimCounters() for _ in range(t_n)]
         traffic = [TrafficCounters() for _ in range(t_n)]
+        if batched:
+            logits, batch_sizes = self._stream_numerics(frames, chunk)
+            for t in range(t_n):
+                self._account_frame(counters[t], traffic[t])
+            start, finish = stream_timeline(arr, occ, lat)
+            fifo_depth = self._residual_fifo_depth(t_n)
+        else:
+            logits, start, finish, fifo_depth = self._stream_percell(
+                frames, arr, occ, lat, counters, traffic)
+            batch_sizes = (1,) * t_n
+        exits = finish[:, -1]
+        return StreamResult(
+            logits=logits, frame_counters=counters,
+            frame_traffic=traffic, arrivals=arr, start=start, finish=finish,
+            occupancy=tuple(occ),
+            measured_ii=int(exits[-1] - exits[-2]) if t_n >= 2 else None,
+            analytic_ii=self.plan.initiation_interval,
+            fill_latency=int(exits[0] - arr[0]),
+            residual_fifo_depth=fifo_depth,
+            batch_sizes=batch_sizes)
+
+    # -- streaming: batched numerics pass ------------------------------------
+
+    def _stream_numerics(self, frames: np.ndarray, chunk: Optional[int]
+                         ) -> Tuple[np.ndarray, Tuple[int, ...]]:
+        """Stage-major batched execution of all frames, math only.
+
+        Counters and traffic go to throwaway sinks and ``account=False``
+        suppresses every transport record, so this pass leaves the NoC
+        link stats, the telemetry recorder and the per-frame counters
+        untouched — the accounting pass owns those."""
+        chunk = DEFAULT_STREAM_CHUNK if chunk is None else int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1: {chunk}")
+        sink_c, sink_t = SimCounters(), TrafficCounters()
+        outs: List[np.ndarray] = []
+        sizes: List[int] = []
+        for lo in range(0, frames.shape[0], chunk):
+            x = frames[lo:lo + chunk]
+            sizes.append(x.shape[0])
+            saved: Dict[str, Tuple[np.ndarray, Optional[int]]] = {}
+            for stage in self._stages:
+                x = self._exec_stage(stage, x, saved, sink_c, sink_t,
+                                     account=False)
+            assert not saved
+            outs.append(x)
+        return np.concatenate(outs, axis=0), tuple(sizes)
+
+    # -- streaming: analytic timing / accounting pass ------------------------
+
+    def _account_frame(self, counters: SimCounters,
+                       traffic: TrafficCounters) -> None:
+        """Replay one frame's accounting — the exact counter increments
+        and routed transport records the per-cell wavefront emits for a
+        single frame, without executing any numerics.  Every increment
+        is a function of the plan alone (``TraceExecutor._account`` is
+        fully analytic; ``simulate_fc``'s accounting is batch- and
+        value-independent, so a zero probe row replays it)."""
+        saved: Dict[str, Tuple[Optional[int], int]] = {}
+        stages = self._stages
+        for s, stage in enumerate(stages):
+            self._account_stage(stage, saved, counters, traffic)
+            if s + 1 < len(stages):
+                self._record_ofm(stage.li, stages[s + 1].li, traffic)
+
+    def _account_stage(self, stage: _Stage,
+                       saved: Dict[str, Tuple[Optional[int], int]],
+                       counters: SimCounters,
+                       traffic: TrafficCounters) -> None:
+        """Accounting-only mirror of :meth:`_exec_stage` for one frame.
+        ``saved`` maps residual saves to (producing layer, frame bytes)."""
+        placement = self.placement
+        noc = placement.noc
+        li = stage.li
+        layer = self.cnn.layers[li]
+        transport = NoCTransport(noc, base=placement.block_start[li],
+                                 counters=traffic, recorder=self.recorder)
+        if stage.kind == "fc":
+            # account_only walks the grid dataflow and emits its
+            # (value-independent) increments without the weight gemm —
+            # the probe row only sets the batch shape
+            c_in = self.params[layer.name].shape[0]
+            act = "relu" if li < len(self.cnn.layers) - 1 else None
+            simulate_fc(
+                np.zeros((1, c_in)),
+                np.asarray(self.params[layer.name], np.float64),
+                self.n_c, self.n_m, activation=act,
+                counters=counters, transport=transport,
+                engine=self.pe_engine, handle=self._handles[li],
+                account_only=True)
+            return
+        mesh_root = NoCTransport(noc, base=0, counters=traffic,
+                                 recorder=self.recorder)
+        if layer.name.endswith("_a"):
+            # the saved value is the *input* to the `_a` layer
+            saved[layer.name] = (stage.prev_li, layer.h * layer.w * layer.c)
+        self._account_layer(li, transport, counters)
+        if layer.residual_from is not None:
+            src_li, res_bytes = saved.pop(layer.residual_from)
+            if stage.sc_li is not None:
+                sc_li = stage.sc_li
+                sc_tr = NoCTransport(noc, base=placement.block_start[sc_li],
+                                     counters=traffic,
+                                     recorder=self.recorder)
+                self._record_residual(mesh_root, src_li,
+                                      placement.block_start[sc_li],
+                                      res_bytes)
+                self._account_layer(sc_li, sc_tr, counters)
+                lp = self.plan.layers[sc_li]
+                mesh_root.record(placement.block_end[sc_li],
+                                 placement.block_end[li], RESIDUAL,
+                                 lp.out_pixels * lp.c_out)
+            else:
+                self._record_residual(mesh_root, src_li,
+                                      placement.block_end[li], res_bytes)
+            lp = self.plan.layers[li]
+            counters.act_ops += lp.out_pixels * lp.c_out  # post-add ReLU
+
+    def _account_layer(self, li: int, transport: NoCTransport,
+                       counters: SimCounters) -> None:
+        """One conv layer's analytic accounting (every strip)."""
+        strips = self._strips.get(li)
+        if strips is None:
+            self._executor(li, 0, self.schedules[li], transport,
+                           counters)._account()
+        else:
+            for si, strip in enumerate(strips):
+                self._executor(li, si, strip.sched, transport,
+                               counters)._account()
+
+    def _residual_fifo_depth(self, t_n: int) -> int:
+        """Closed form of the per-cell loop's FIFO occupancy maximum.
+
+        A (save stage ``ks``, add stage ``ka``) entry for frame ``t`` is
+        alive after wavefront step ``m`` iff ``ks <= m - t < ka`` (saved
+        when cell ``(t, ks)`` executes at step ``t + ks``, popped inside
+        cell ``(t, ka)``), so the depth at step ``m`` counts the frames
+        in that window for each pair."""
+        pairs: List[Tuple[int, int]] = []
+        save_stage: Dict[str, int] = {}
+        for k, st in enumerate(self._stages):
+            if st.kind != "conv":
+                continue
+            layer = self.cnn.layers[st.li]
+            if layer.name.endswith("_a"):
+                save_stage[layer.name] = k
+            if layer.residual_from is not None:
+                pairs.append((save_stage[layer.residual_from], k))
+        if not pairs:
+            return 0
+        depth = 0
+        for m in range(t_n + len(self._stages) - 1):
+            d = 0
+            for ks, ka in pairs:
+                lo, hi = max(0, m - ka + 1), min(t_n - 1, m - ks)
+                d += max(0, hi - lo + 1)
+            depth = max(depth, d)
+        return depth
+
+    # -- streaming: interleaved per-cell oracle ------------------------------
+
+    def _stream_percell(self, frames: np.ndarray, arr: np.ndarray,
+                        occ: List[int], lat: List[int],
+                        counters: List[SimCounters],
+                        traffic: List[TrafficCounters]
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """The original interleaved wavefront loop, kept verbatim as the
+        differential-testing oracle: one ``_exec_stage`` call per
+        (frame, stage) cell, timing recurrence and accounting inline."""
+        t_n, s_n = frames.shape[0], len(self._stages)
+        stages = self._stages
         saved: List[Dict[str, Tuple[np.ndarray, Optional[int]]]] = [
             {} for _ in range(t_n)]
         inflight: Dict[int, np.ndarray] = {}  # frame -> inter-stage value
@@ -689,23 +995,15 @@ class NetworkSimulator:
             # shortcut FIFO occupancy across all in-flight frames
             fifo_depth = max(fifo_depth, sum(len(d) for d in saved))
         assert not inflight and all(lg is not None for lg in logits)
-        exits = finish[:, -1]
-        return StreamResult(
-            logits=np.stack(logits), frame_counters=counters,
-            frame_traffic=traffic, arrivals=arr, start=start, finish=finish,
-            occupancy=tuple(occ),
-            measured_ii=int(exits[-1] - exits[-2]),
-            analytic_ii=self.plan.initiation_interval,
-            fill_latency=int(exits[0] - arr[0]),
-            residual_fifo_depth=fifo_depth)
+        return np.stack(logits), start, finish, fifo_depth
 
     def _record_residual(self, mesh_root: NoCTransport,
                          src_layer: Optional[int], dst_tile: int,
-                         saved: np.ndarray) -> None:
+                         nbytes: int) -> None:
         """Shortcut stream: the saved block input travels from its
-        producer block's tail to the join/projection site (8b acts)."""
+        producer block's tail to the join/projection site (8b acts).
+        ``nbytes`` is one frame's saved-input footprint (H*W*C)."""
         if src_layer is None:
             return  # shortcut of the very first layer: off-chip input
-        nbytes = int(np.prod(saved.shape[1:]))
         mesh_root.record(self.placement.block_end[src_layer], dst_tile,
                          RESIDUAL, nbytes)

@@ -371,7 +371,8 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
                 counters: Optional[SimCounters] = None,
                 transport: Optional[NoCTransport] = None,
                 engine: Optional["PEEngine"] = None,
-                handle: Optional["FCHandle"] = None) -> np.ndarray:
+                handle: Optional["FCHandle"] = None,
+                account_only: bool = False) -> np.ndarray:
     """Partitioned MVM on an m_t x m_a tile grid, psums added down columns.
 
     x: (c_in,) or (B, c_in); w: (c_in, c_out).  Driven by compile_fc_block
@@ -380,6 +381,12 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
     tile holds one ``<= n_c``-row weight slice — exactly one CIM
     subarray — so the pluggable ``engine`` MACs it in one call and the
     column chain accumulates digitally (ADC codes under quantization).
+
+    ``account_only=True`` walks the same tile grid and emits every
+    counter/transport increment — all of which are value- and
+    batch-independent — but skips the engine arithmetic and returns
+    zeros.  The streamed timing/accounting pass uses this to replay a
+    frame's FC accounting without re-paying the weight-matrix gemm.
     """
     from repro.core.engine import EXACT_ENGINE
 
@@ -390,7 +397,8 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None]
-    x = engine.quant_stream(handle, x)  # engine input domain, once
+    if not account_only:
+        x = engine.quant_stream(handle, x)  # engine input domain, once
     c_in, c_out = w.shape
     m_t, m_a, tables = compile_fc_block("fc", c_in, c_out, n_c, n_m, activation)
     cnt = counters if counters is not None else SimCounters()
@@ -404,8 +412,9 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
             k0, k1 = i * n_c, min((i + 1) * n_c, c_in)
             acc = np.zeros((x.shape[0], n1 - n0), np.float64)
             if instr.has(FROM_PE):
-                acc += engine.fc_mac(handle, x[:, k0:k1], k0, k1, n0, n1,
-                                     quantized=True)
+                if not account_only:
+                    acc += engine.fc_mac(handle, x[:, k0:k1], k0, k1, n0,
+                                         n1, quantized=True)
                 cnt.macs += (k1 - k0) * (n1 - n0)
             if instr.rx_from(Port.N):
                 # chain-add: the upstream psum received from the north
@@ -423,9 +432,11 @@ def simulate_fc(x: np.ndarray, w: np.ndarray, n_c: int, n_m: int,
                     cnt.chain_hops += 1
             if instr.has(ACT_EN):
                 act_fired = True  # column tail: activation after dequant
-        psum = engine.finalize_fc(handle, psum, n0, n1)
+        if not account_only:
+            psum = engine.finalize_fc(handle, psum, n0, n1)
         if act_fired:
-            psum = _ACT[activation or "identity"](psum)
+            if not account_only:
+                psum = _ACT[activation or "identity"](psum)
             cnt.act_ops += psum.shape[-1]
         out[:, n0:n1] = psum
     return out[0] if squeeze else out

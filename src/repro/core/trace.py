@@ -201,12 +201,43 @@ class TraceExecutor:
         self.weights: List[np.ndarray] = self.handle.tile_w
         self._psum_bytes = sched.c_out * PSUM_BYTES
         self._jax_fn = None
+        # zero-initialized work buffers reused across runs (the batched
+        # streaming numerics pass calls each executor once per frame
+        # chunk, so the padded raster / gather buffers are hot)
+        self._scratch: dict = {}
 
     # -- execution -----------------------------------------------------------
 
-    def run(self, ifm: np.ndarray) -> np.ndarray:
+    #: per-buffer cap on cross-run scratch retention (f64 elements) —
+    #: larger buffers (ImageNet head layers) stay transient so a parked
+    #: simulator does not pin hundreds of MB between calls
+    _SCRATCH_CAP_ELEMS = 1 << 22
+
+    def _scratch_buf(self, key: str, shape: Tuple[int, ...],
+                     dtype) -> np.ndarray:
+        """A zero-initialized scratch array reused across runs.
+
+        Safe because every caller fully overwrites the elements it later
+        reads back variable data from, and the zero pad (the raster
+        border, the short-``kc`` gather tail) is never written — so the
+        zeros from the first allocation persist bit-exactly."""
+        buf = self._scratch.get(key)
+        if buf is not None and buf.shape == shape \
+                and buf.dtype == np.dtype(dtype):
+            return buf
+        buf = np.zeros(shape, dtype)
+        if buf.size <= self._SCRATCH_CAP_ELEMS:
+            self._scratch[key] = buf
+        return buf
+
+    def run(self, ifm: np.ndarray, account: bool = True) -> np.ndarray:
         """ifm: (H, W, C) or (B, H, W, C) -> OFM (..., E, F, M); bitwise
-        identical to ``BlockSimulator.run`` on the same schedule."""
+        identical to ``BlockSimulator.run`` on the same schedule.
+
+        ``account=False`` runs the math only — no ``SimCounters``
+        increments and no routed transport records.  The streaming
+        executor's batched numerics pass uses it; per-frame accounting
+        is then replayed analytically via :meth:`_account`."""
         s = self.sched
         squeeze = ifm.ndim == 3
         if squeeze:
@@ -216,7 +247,8 @@ class TraceExecutor:
         if self.use_jax and self.engine.name == "exact":
             out = self._run_jax(ifm)
         else:
-            padded = np.zeros((b, s.hp, s.wp, s.c_in), np.float64)
+            padded = self._scratch_buf(
+                "padded", (b, s.hp, s.wp, s.c_in), np.float64)
             padded[:, s.pad:s.pad + s.h, s.pad:s.pad + s.w] = ifm
             stream = padded.reshape(b, -1, s.c_in)
             if not self.fused:
@@ -225,7 +257,8 @@ class TraceExecutor:
                 out = self._run_jax_quant(stream)
             else:
                 out = self._execute_quant(stream)
-        self._account()
+        if account:
+            self._account()
         return out[0] if squeeze else out
 
     def _execute_np(self, stream: np.ndarray) -> np.ndarray:
@@ -314,10 +347,11 @@ class TraceExecutor:
         qs = engine.quant_stream(handle, stream).astype(np.int8)
         b, ef, m = qs.shape[0], self.plan.fires, s.c_out
         out = np.empty((b, ef, m), np.float64)
-        buf = None
+        kcm = max(self.handle.kc)
         for lo, hi in self._quant_chunks(ef, b):
-            if buf is None or buf.shape[1] != b * (hi - lo):
-                buf = None
+            buf = self._scratch_buf(
+                "qbuf", (len(self.plan.tiles), b * (hi - lo), kcm),
+                self.handle.w_stack.dtype)
             buf = self._gather_tiles(qs, lo, hi, buf)
             codes = engine.tiles_mac(handle, buf)    # (B*rows, M) code sums
             out[:, lo:hi] = codes.reshape(b, hi - lo, m)

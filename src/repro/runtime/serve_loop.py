@@ -263,7 +263,9 @@ class StreamServeReport:
 
     arrivals: np.ndarray              # (T,) request arrival cycles
     latency_cycles: np.ndarray        # (T,) closed-loop latency per request
-    measured_ii: int                  # steady-state exit spacing (cycles)
+    #: steady-state exit spacing (cycles); None on a single-request
+    #: trace — one exit has no spacing to measure
+    measured_ii: Optional[int]
     analytic_ii: int                  # plan_network's slowest-stage bound
     fill_latency: int                 # first request: arrival -> exit
     offered_inf_s: float              # request rate the queue injected
@@ -274,6 +276,10 @@ class StreamServeReport:
     flagged_frames: Tuple[int, ...] = ()
     #: monitor tripped ``trip_limit`` consecutive flags: reshard advised
     straggler_escalate: bool = False
+    #: realized numerics micro-batch sizes (frames per batched stage
+    #: sweep, bounded by ``batch_window``); mirrors the
+    #: ``serve_batch_size`` metrics histogram
+    batch_sizes: Tuple[int, ...] = ()
 
     @property
     def latency_s(self) -> np.ndarray:
@@ -353,7 +359,8 @@ def serve_stream(sim, frames: np.ndarray,
                  hist_bins: int = 16,
                  straggler: Optional["StragglerMonitor"] = None,
                  metrics: Optional["MetricsRegistry"] = None,
-                 metric_labels: Optional[Dict[str, str]] = None
+                 metric_labels: Optional[Dict[str, str]] = None,
+                 batch_window: Optional[int] = None
                  ) -> StreamServeReport:
     """Request-queue front-end over the streaming simulator.
 
@@ -376,10 +383,20 @@ def serve_stream(sim, frames: np.ndarray,
 
     ``metrics`` (a ``repro.telemetry.MetricsRegistry``) registers
     Prometheus-style series — completed/flagged frame counters, the
-    latency histogram, queue-depth distribution and goodput gauges.
-    ``metric_labels`` (e.g. ``{"tenant": "a"}``) attaches every series
-    to that label set, so multi-tenant serving scrapes per-tenant
-    series from one shared registry without any refactor.
+    latency histogram, queue-depth distribution, realized micro-batch
+    sizes (``serve_batch_size``) and goodput gauges.  ``metric_labels``
+    (e.g. ``{"tenant": "a"}``) attaches every series to that label set,
+    so multi-tenant serving scrapes per-tenant series from one shared
+    registry without any refactor.
+
+    ``batch_window`` is the micro-batching admission window: queued
+    requests execute as one numerics batch of up to that many frames
+    (``run_stream``'s frame-axis chunk).  Batching cannot change a
+    reported bit — per-request latency comes from the unchanged
+    analytic timing model, and the batched gemms are row-position
+    invariant — so the knob trades simulator working set against
+    per-request Python overhead only.  A lone queued request (T=1) is
+    served as a stream with ``measured_ii=None``.
     """
     from repro.core.energy import STEP_CLOCK_HZ
     from repro.runtime.fault import StragglerMonitor
@@ -409,8 +426,9 @@ def serve_stream(sim, frames: np.ndarray,
                                   report, None)
         return report
     arrivals = np.floor(np.arange(t_n) * spacing).astype(np.int64)
-    with _tspan(f"serve_stream:{sim.cnn.name}", frames=t_n):
-        res = sim.run_stream(frames, arrivals=arrivals)
+    with _tspan(f"serve_stream:{sim.cnn.name}", frames=t_n,
+                batch_window=batch_window or 0):
+        res = sim.run_stream(frames, arrivals=arrivals, chunk=batch_window)
     lat = res.frame_latency
     exits = res.finish[:, -1]
     exit_span = int(exits[-1] - exits[0])
@@ -428,7 +446,7 @@ def serve_stream(sim, frames: np.ndarray,
         offered_inf_s=clock_hz / spacing, throughput_inf_s=throughput,
         clock_hz=clock_hz, latency_hist=(counts, edges),
         flagged_frames=tuple(mon.flagged_steps),
-        straggler_escalate=escalate)
+        straggler_escalate=escalate, batch_sizes=res.batch_sizes)
     if metrics is not None:
         _export_serve_metrics(metrics, dict(metric_labels or {}),
                               report, res)
@@ -476,9 +494,15 @@ def _export_serve_metrics(metrics, labels: Dict[str, str],
     series(metrics.gauge(
         "serve_offered_inf_s", "offered request rate", lnames)).set(
             report.offered_inf_s)
+    batch_hist = series(metrics.histogram(
+        "serve_batch_size", "realized numerics micro-batch sizes", lnames,
+        buckets=(1, 2, 4, 8, 16, 32, 64)))
+    for size in (res.batch_sizes if res is not None else ()):
+        batch_hist.observe(float(size))
     series(metrics.gauge(
         "serve_measured_ii_cycles", "steady-state exit spacing",
-        lnames)).set(report.measured_ii)
+        lnames)).set(float(report.measured_ii)
+                     if report.measured_ii is not None else 0.0)
     series(metrics.gauge(
         "serve_straggler_escalate", "monitor escalation tripped",
         lnames)).set(1.0 if report.straggler_escalate else 0.0)

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import json
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 # Trace "process" ids: host wall-clock vs simulated mesh cycles.  They
 # are separate top-level groups in Perfetto so the two clock domains
@@ -171,6 +171,13 @@ def stream_timeline_events(res, stage_names: Optional[Sequence[str]] = None,
       spans nested inside — pipeline skew reads as a staircase;
     * a **queue-depth counter** (``C`` events) stepped at every arrival
       and exit, when the result carries arrivals.
+
+    The timeline is sourced entirely from the result's timing pass
+    (``start``/``finish``/``occupancy``/``arrivals``) — it never touches
+    the numerics, so batched and per-cell stream executions render the
+    same trace.  When the result carries ``batch_sizes`` (the batched
+    path's realized micro-batches), each frame's outer span is annotated
+    with the micro-batch it rode in (``numerics_batch``/``batch_size``).
     """
     if clock_hz is None:
         from repro.core.network import STEP_CLOCK_HZ
@@ -192,14 +199,24 @@ def stream_timeline_events(res, stage_names: Optional[Sequence[str]] = None,
                    "args": {"name": "mesh (simulated cycles)"}})
 
     arrivals = getattr(res, "arrivals", None)
+    # frame -> (micro-batch index, size) from the numerics pass, if any
+    frame_batch: Dict[int, Tuple[int, int]] = {}
+    t0 = 0
+    for bi, size in enumerate(getattr(res, "batch_sizes", ()) or ()):
+        for t in range(t0, t0 + size):
+            frame_batch[t] = (bi, size)
+        t0 += size
     for t in range(t_n):
         inject = float(start[t, 0]) if arrivals is None else float(arrivals[t])
         exit_c = float(finish[t, s_n - 1])
         frame_id = str(t)
+        args: Dict[str, Any] = {"latency_cycles": int(exit_c - inject)}
+        if t in frame_batch:
+            args["numerics_batch"], args["batch_size"] = frame_batch[t]
         events.append({"name": f"frame {t}", "cat": "frame", "ph": "b",
                        "id": frame_id, "ts": inject * c2us,
                        "pid": TRACE_PID_SIM, "tid": 0,
-                       "args": {"latency_cycles": int(exit_c - inject)}})
+                       "args": args})
         for k in range(s_n):
             s_us = float(start[t, k]) * c2us
             events.append({"name": names[k], "cat": "frame", "ph": "b",

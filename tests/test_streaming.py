@@ -4,26 +4,37 @@ backend per frame (logits, ``SimCounters``, ``TrafficCounters``), the
 steady-state initiation interval measured from the simulated stage
 timeline must equal ``plan_network``'s analytic slowest-stage bound,
 and the retired B=1 BLAS caveat must stay retired (``gemm_rows``
-pins every product to a row-position-invariant gemm path)."""
+pins every product to a row-position-invariant gemm path).
+
+The batched streaming path (numerics decoupled from the timing model)
+is held bitwise to the per-cell oracle (``batched=False``) by the
+differential suite below: per-frame logits, counters, traffic, the
+start/finish timeline, residual-FIFO depth and per-link heatmaps."""
 import numpy as np
 import pytest
 from conftest import int_params as _int_params
 
 from repro.configs.cnn import CNN_BENCHMARKS, ConvLayer
-from repro.core.network import NetworkSimulator
+from repro.core.network import (
+    NetworkSimulator,
+    stream_timeline,
+    stream_timeline_scalar,
+)
 from repro.core.schedule import compile_conv_block
 from repro.core.simulator import BlockSimulator, gemm_rows, simulate_fc
 from repro.core.trace import TraceExecutor
 from repro.core.transport import RESIDUAL
+from repro.telemetry.heatmap import LinkRecorder, check_conservation
 
 
-def _stream_setup(name, t_n, seed=0):
+def _stream_setup(name, t_n, seed=0, **sim_kw):
     rng = np.random.default_rng(seed)
     cnn = CNN_BENCHMARKS[name]()
     params = _int_params(cnn, rng)
     hw = cnn.input_hw
     frames = rng.integers(0, 2, (t_n, hw, hw, 3)).astype(np.float64)
-    sim = NetworkSimulator(cnn, params, backend="trace", streaming=True)
+    sim = NetworkSimulator(cnn, params, backend="trace", streaming=True,
+                           **sim_kw)
     return sim, frames
 
 
@@ -121,8 +132,27 @@ def test_stream_flag_validation():
         sim.run_stream(x)
     stream_sim = NetworkSimulator(cnn, params, backend="trace",
                                   streaming=True)
-    with pytest.raises(ValueError):  # one frame has no steady state
-        stream_sim.run_stream(x[:1])
+    with pytest.raises(ValueError):  # zero frames is still rejected
+        stream_sim.run_stream(x[:0])
+    with pytest.raises(ValueError):  # so is a degenerate chunk
+        stream_sim.run_stream(x, chunk=0)
+
+
+def test_stream_accepts_single_frame():
+    """A lone queued request runs as a stream: full timeline, counters
+    and fill latency, with ``measured_ii=None`` (one exit has no
+    spacing to measure) on both execution paths."""
+    sim, frames = _stream_setup("vgg11-cifar10", 1)
+    res = sim.run_stream(frames)
+    oracle = sim.run_stream(frames, batched=False)
+    assert res.measured_ii is None and oracle.measured_ii is None
+    assert res.logits.tobytes() == oracle.logits.tobytes()
+    seq = sim.run(frames)
+    assert res.logits.tobytes() == seq.logits.tobytes()
+    assert res.frame_counters[0] == seq.counters
+    assert res.fill_latency == int(res.finish[0, -1] - res.arrivals[0]) > 0
+    with pytest.raises(ValueError):  # no steady-state throughput at T=1
+        res.inferences_per_s()
 
 
 # ---------------------------------------------------------------------------
@@ -222,3 +252,220 @@ def test_fc_b1_equals_batched_lane():
     for b in (1, 2, 3, 6):
         sub = simulate_fc(x[:b], w, 256, 256)
         assert np.array_equal(sub, full[:b]), b
+
+
+# ---------------------------------------------------------------------------
+# Batched streaming vs the per-cell oracle: the differential suite
+# ---------------------------------------------------------------------------
+
+# one simulator is shared across the T sweep of each (model, engine)
+# combo; a single-slot cache keeps peak memory at one model's weights
+_SIM_SLOT = {"key": None, "sim": None, "hw": None}
+
+
+def _diff_sim(name, engine):
+    if _SIM_SLOT["key"] != (name, engine):
+        rng = np.random.default_rng(0)
+        cnn = CNN_BENCHMARKS[name]()
+        kw = {}
+        if engine == "cim":
+            kw = dict(engine="cim", calib_images=rng.random(
+                (2, cnn.input_hw, cnn.input_hw, 3)))
+        _SIM_SLOT["key"] = (name, engine)
+        _SIM_SLOT["sim"] = NetworkSimulator(
+            cnn, _int_params(cnn, rng), backend="trace", streaming=True,
+            **kw)
+        _SIM_SLOT["hw"] = cnn.input_hw
+    return _SIM_SLOT["sim"], _SIM_SLOT["hw"]
+
+
+def _traffic_views(ft):
+    return (dict(ft.byte_hops), dict(ft.packets), dict(ft.hops))
+
+
+def _stream_with_recorder(sim, frames, batched):
+    rec = LinkRecorder(sim.placement.noc)
+    sim.recorder = rec
+    try:
+        res = sim.run_stream(frames, batched=batched)
+    finally:
+        sim.recorder = None
+    return res, rec, dict(sim.placement.noc.link_traffic)
+
+
+_DIFF_CASES = [
+    pytest.param(name, engine, t_n,
+                 marks=([pytest.mark.slow] if "imagenet" in name else []),
+                 id=f"{name}-{engine}-T{t_n}")
+    for name in ("vgg11-cifar10", "resnet18-cifar10", "vgg16-imagenet",
+                 "vgg19-imagenet", "resnet50-imagenet")
+    for engine in ("exact", "cim")
+    for t_n in (1, 2, 6)
+]
+
+
+@pytest.mark.parametrize("name,engine,t_n", _DIFF_CASES)
+def test_stream_batched_equals_percell(name, engine, t_n):
+    """The decoupled batched path is bitwise-identical to the per-cell
+    oracle in every observable: per-frame logits, per-frame counters
+    and routed traffic, the start/finish timeline, the residual-FIFO
+    depth, the NoC link stats and the per-link telemetry heatmap —
+    which also passes exact-integer conservation against the summed
+    per-frame traffic."""
+    sim, hw = _diff_sim(name, engine)
+    rng = np.random.default_rng(7)
+    frames = rng.integers(0, 2, (t_n, hw, hw, 3)).astype(np.float64)
+    res_b, rec_b, links_b = _stream_with_recorder(sim, frames, True)
+    res_o, rec_o, links_o = _stream_with_recorder(sim, frames, False)
+    assert res_b.logits.tobytes() == res_o.logits.tobytes()
+    assert np.array_equal(res_b.start, res_o.start)
+    assert np.array_equal(res_b.finish, res_o.finish)
+    assert np.array_equal(res_b.arrivals, res_o.arrivals)
+    assert res_b.residual_fifo_depth == res_o.residual_fifo_depth
+    assert res_b.measured_ii == res_o.measured_ii
+    assert (res_b.measured_ii is None) == (t_n == 1)
+    for t in range(t_n):
+        assert res_b.frame_counters[t] == res_o.frame_counters[t], t
+        assert _traffic_views(res_b.frame_traffic[t]) == \
+            _traffic_views(res_o.frame_traffic[t]), t
+    # NoC link stats and telemetry heatmaps agree link-for-link
+    assert links_b == links_o
+    assert rec_b.link_bytes == rec_o.link_bytes
+    # and the heatmap conserves exactly against the summed frame traffic
+    total = {}
+    for ft in res_b.frame_traffic:
+        for kind, v in ft.byte_hops.items():
+            total[kind] = total.get(kind, 0) + v
+
+    class _Total:
+        byte_hops = total
+    assert check_conservation(rec_b.heatmap(), _Total) == []
+    # the batched path really batched (and the oracle really did not)
+    assert sum(res_b.batch_sizes) == t_n
+    assert res_o.batch_sizes == (1,) * t_n
+
+
+def test_stream_chunk_boundaries_are_bitwise_free():
+    """Any frame-axis chunking of the numerics pass produces identical
+    results (gemm_rows row-position invariance), and the realized
+    micro-batch sizes are reported."""
+    sim, frames = _stream_setup("resnet18-cifar10", 5)
+    whole = sim.run_stream(frames)
+    assert whole.batch_sizes == (5,)
+    for chunk in (1, 2, 3, 16):
+        res = sim.run_stream(frames, chunk=chunk)
+        assert res.logits.tobytes() == whole.logits.tobytes(), chunk
+        assert sum(res.batch_sizes) == 5
+        assert max(res.batch_sizes) <= chunk
+    assert sim.run_stream(frames, chunk=2).batch_sizes == (2, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# The vectorized timing recurrence == the scalar loop (property test)
+# ---------------------------------------------------------------------------
+
+
+def _assert_timeline_equal(rng):
+    s_n = int(rng.integers(1, 8))
+    t_n = int(rng.integers(1, 12))
+    occ = rng.integers(1, 60, s_n).tolist()
+    lat = [int(o + d) for o, d in zip(occ, rng.integers(0, 80, s_n))]
+    arr = np.sort(rng.integers(0, 400, t_n)).astype(np.int64)
+    start_v, finish_v = stream_timeline(arr, occ, lat)
+    start_s, finish_s = stream_timeline_scalar(arr, occ, lat)
+    assert np.array_equal(start_v, start_s)
+    assert np.array_equal(finish_v, finish_s)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_stream_timeline_vectorized_equals_scalar(seed):
+        """Property over random arrival vectors / stage shapes: the
+        max-plus prefix-scan timeline equals the per-cell recurrence."""
+        _assert_timeline_equal(np.random.default_rng(seed))
+except ImportError:  # hypothesis not installed: seeded fuzz fallback
+    @pytest.mark.parametrize("seed", range(80))
+    def test_stream_timeline_vectorized_equals_scalar(seed):
+        """Property over random arrival vectors / stage shapes: the
+        max-plus prefix-scan timeline equals the per-cell recurrence."""
+        _assert_timeline_equal(np.random.default_rng(seed))
+
+
+def test_stream_timeline_matches_percell_run():
+    """The analytic timeline is the one the per-cell executor measures,
+    including spaced (arrival-limited) injection."""
+    sim, frames = _stream_setup("resnet18-cifar10", 4)
+    arr = np.array([0, 10, 5000, 5001], np.int64)
+    batched = sim.run_stream(frames, arrivals=arr)
+    oracle = sim.run_stream(frames, arrivals=arr, batched=False)
+    assert np.array_equal(batched.start, oracle.start)
+    assert np.array_equal(batched.finish, oracle.finish)
+    occ = [st_.occupancy for st_ in sim._stages]
+    lat = [st_.latency for st_ in sim._stages]
+    start, finish = stream_timeline(arr, occ, lat)
+    assert np.array_equal(start, oracle.start)
+    assert np.array_equal(finish, oracle.finish)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage setup happens once, at construction (Profiler span assertion)
+# ---------------------------------------------------------------------------
+
+
+def test_stage_setup_happens_once_per_simulator():
+    """Compiled closures/scratch are built in ``__init__`` — repeated
+    ``serve_stream``/``run_stream`` calls on one simulator must emit no
+    further lowering/executor/jit-build spans, and the executor objects
+    (with their scratch and compiled plans) stay the same instances."""
+    from repro.runtime.serve_loop import serve_stream
+    from repro.telemetry.spans import Profiler
+
+    prof_build = Profiler()
+    with prof_build:
+        sim, frames = _stream_setup("vgg11-cifar10", 3)
+    built = [e["name"] for e in prof_build.events]
+    assert any(n.startswith("trace_lower:") for n in built)
+    assert any(n.startswith("executor_build:") for n in built)
+    assert sim._executors  # eager, not lazy
+    ids_before = {k: id(v) for k, v in sim._executors.items()}
+
+    prof_run = Profiler()
+    with prof_run:
+        serve_stream(sim, frames)
+        serve_stream(sim, frames, batch_window=2)
+        sim.run_stream(frames, batched=False)
+    names = [e["name"] for e in prof_run.events]
+    assert not any(n.startswith(("trace_lower:", "executor_build:",
+                                 "jit_build:")) for n in names), names
+    assert {k: id(v) for k, v in sim._executors.items()} == ids_before
+
+
+# ---------------------------------------------------------------------------
+# serve_stream micro-batching window
+# ---------------------------------------------------------------------------
+
+
+def test_serve_stream_batch_window_and_metrics():
+    """The admission window chunks the numerics batch without changing
+    any reported number, a lone request serves cleanly, and the metrics
+    registry exposes the realized micro-batch sizes."""
+    from repro.runtime.serve_loop import serve_stream
+    from repro.telemetry.metrics import MetricsRegistry
+
+    sim, frames = _stream_setup("vgg11-cifar10", 6)
+    base = serve_stream(sim, frames)
+    reg = MetricsRegistry()
+    rep = serve_stream(sim, frames, batch_window=2, metrics=reg)
+    assert np.array_equal(rep.latency_cycles, base.latency_cycles)
+    assert rep.measured_ii == base.measured_ii
+    hist = reg.snapshot()["metrics"]["serve_batch_size"]["series"][0]
+    assert hist["count"] == 3 and hist["sum"] == 6.0  # 6 frames / window 2
+
+    lone = serve_stream(sim, frames[:1], metrics=reg)
+    assert lone.measured_ii is None
+    assert lone.completed == 1
+    assert lone.latency_cycles[0] == lone.fill_latency
